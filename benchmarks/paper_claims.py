@@ -1,0 +1,152 @@
+"""Paper-claims benchmarks — one function per paper table/figure.
+
+Fig. 7a  speedup: SALO cycle model vs dense-on-SALO, PLUS measured
+         wall-clock of SALO blockwise vs dense attention on this host CPU
+         (the honest locally-measurable analog of the paper's CPU/GPU rows).
+§2.1     quadratic scaling: dense attention latency vs n (the paper's
+         "145.70ms at n=8192 vs 9.20ms at n=2048 ~ 16x" observation),
+         and SALO's linear scaling on the same sweep.
+§6.3     Sanger comparison: PE utilization of hybrid patterns (>75% claim)
+         vs Sanger's irregular-sparsity 55-75% band; 1.33x speedup model.
+Table 2  workload sparsities (asserted in tests; reported here).
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.salo_cycle_model import (PAPER_SPEEDUP_CPU,
+                                         PAPER_SPEEDUP_GPU, SALOHardware,
+                                         attention_cycles,
+                                         dense_attention_cycles)
+from repro.core import patterns as P
+from repro.core.blockwise import blockwise_attention
+from repro.kernels.ref import reference_attention
+
+WORKLOADS = {
+    "longformer": dict(pattern=P.longformer(512, n_global=1), n=4096,
+                       d_head=64, n_heads=12),
+    "vil-stage1": dict(pattern=P.vil((56, 56), (15, 15), 1), n=1 + 56 * 56,
+                       d_head=64, n_heads=3),
+    "vil-stage2": dict(pattern=P.vil((28, 28), (15, 15), 1), n=1 + 28 * 28,
+                       d_head=64, n_heads=6),
+}
+
+
+def _time(fn: Callable, *args, reps=3) -> float:
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / reps
+
+
+def fig7_speedup(rows):
+    """Fig. 7a analog. Cycle-model speedup = dense cycles / SALO cycles;
+    measured = dense-masked attention vs SALO blockwise on host CPU."""
+    rng = np.random.default_rng(0)
+    for name, w in WORKLOADS.items():
+        pat, n, d, h = w["pattern"], w["n"], w["d_head"], w["n_heads"]
+        cyc = attention_cycles(pat, n, d, h)
+        dense_cyc = dense_attention_cycles(n, d, h)
+        model_speedup = dense_cyc["cycles"] / cyc["cycles"]
+
+        B = h  # fold heads
+        q, k, v = (jnp.asarray(rng.normal(size=(B, n, d)), jnp.float32)
+                   for _ in range(3))
+        t_sparse = _time(jax.jit(lambda a, b, c: blockwise_attention(
+            a, b, c, pat, block_q=128, block_k=128)), q, k, v)
+        t_dense = _time(jax.jit(lambda a, b, c: blockwise_attention(
+            a, b, c, P.full(), block_q=128, block_k=128)), q, k, v)
+        rows.append((f"fig7/{name}/salo_cycle_model_latency",
+                     cyc["latency_s"] * 1e6,
+                     f"util={cyc['utilization']:.3f}"))
+        rows.append((f"fig7/{name}/speedup_vs_dense_cyclemodel",
+                     model_speedup,
+                     f"paper_gpu={PAPER_SPEEDUP_GPU[name]}x_cpu="
+                     f"{PAPER_SPEEDUP_CPU[name]}x"))
+        rows.append((f"fig7/{name}/speedup_vs_dense_measured_cpu",
+                     t_dense / t_sparse,
+                     f"dense={t_dense*1e3:.1f}ms_sparse={t_sparse*1e3:.1f}ms"))
+
+
+def sec21_quadratic_scaling(rows):
+    """§2.1: dense grows ~quadratically with n; SALO grows linearly."""
+    rng = np.random.default_rng(0)
+    d, w_ = 64, 256
+    times_dense, times_salo, ns = [], [], [1024, 2048, 4096]
+    for n in ns:
+        q, k, v = (jnp.asarray(rng.normal(size=(2, n, d)), jnp.float32)
+                   for _ in range(3))
+        pat = P.causal_sliding_window(w_)
+        times_salo.append(_time(jax.jit(
+            lambda a, b, c, p=pat: blockwise_attention(a, b, c, p)), q, k, v))
+        times_dense.append(_time(jax.jit(
+            lambda a, b, c: blockwise_attention(a, b, c, P.full())), q, k, v))
+    g_dense = times_dense[-1] / times_dense[0]
+    g_salo = times_salo[-1] / times_salo[0]
+    rows.append(("sec21/dense_growth_4x_n", g_dense,
+                 "expect ~16 (quadratic)"))
+    rows.append(("sec21/salo_growth_4x_n", g_salo, "expect ~4 (linear)"))
+
+
+def sec63_sanger_comparison(rows):
+    """§6.3: utilization of hybrid patterns (SALO >75%) vs Sanger's 55-75%
+    on irregular sparsity; same-PE-count speedup = util ratio + Sanger's
+    quadratic low-precision predict pass."""
+    for name, w in WORKLOADS.items():
+        cyc = attention_cycles(w["pattern"], w["n"], w["d_head"],
+                               w["n_heads"])
+        # The paper computes sparsity with the interior approximation
+        # (window^2/grid^2, no edge clipping — see Table 2); normalizing our
+        # exact-mask utilization by the same convention recovers its basis.
+        exact_s = w["pattern"].sparsity(w["n"])
+        if w["pattern"].is_2d:
+            wh, ww = w["pattern"].window2d
+            h_, w_ = w["pattern"].grid2d
+            interior_s = wh * ww / (h_ * w_)
+        else:
+            interior_s = exact_s
+        util_interior = cyc["utilization"] * interior_s / exact_s
+        rows.append((f"sec63/{name}/pe_utilization", cyc["utilization"],
+                     f"interior-convention={util_interior:.3f}; paper "
+                     "claims >0.75 (interior); Sanger 0.55-0.75"))
+    # Sanger (§6.3): same PE count (64x16 = 1024), same sparsity, but (a)
+    # irregular patterns -> 55-75% utilization (use the 0.65 midpoint), and
+    # (b) a low-precision quadratic predict pass for the mask (4-bit QK^T,
+    # modeled at 4x MAC throughput) that SALO does not need.
+    w = WORKLOADS["longformer"]
+    salo = attention_cycles(w["pattern"], w["n"], w["d_head"], w["n_heads"])
+    n_pe = 32 * 32
+    sanger_util = 0.65
+    sanger_main = salo["useful_macs"] / (n_pe * sanger_util)
+    predict = w["n"] ** 2 * w["d_head"] * w["n_heads"] / (n_pe * 4)
+    rows.append(("sec63/salo_vs_sanger_speedup",
+                 (sanger_main + predict) / salo["cycles"],
+                 "paper claims 1.33x"))
+
+
+def table3_quantization(rows):
+    """Table 3 analog: int8(4-frac) QKV quantization error on the paper's
+    workloads (accuracy deltas in the paper are within noise; here we report
+    the attention-output error that drives them)."""
+    from repro.core.quant import quantized_attention
+    rng = np.random.default_rng(0)
+    for name, w in WORKLOADS.items():
+        pat, n, d = w["pattern"], w["n"], w["d_head"]
+        q, k, v = (jnp.asarray(rng.normal(size=(1, 2, n, d)) * 0.7,
+                               jnp.float32) for _ in range(3))
+        ref = jax.jit(lambda a, b, c, p=pat: blockwise_attention(
+            a.reshape(2, n, d), b.reshape(2, n, d), c.reshape(2, n, d), p)
+        )(q, k, v)
+        out = quantized_attention(q, k, v, pat, mode="fixed")
+        err = float(jnp.sqrt(jnp.mean(
+            (out.reshape(2, n, d) - ref) ** 2)))
+        rel = err / float(jnp.sqrt(jnp.mean(ref ** 2)))
+        rows.append((f"table3/{name}/quant_rel_rmse", rel,
+                     "paper: accuracy within 0.14pp of fp32"))

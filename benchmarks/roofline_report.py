@@ -1,0 +1,82 @@
+"""Roofline table from the dry-run JSONs (EXPERIMENTS.md §Roofline).
+
+  PYTHONPATH=src python -m benchmarks.roofline_report [--mesh pod1|pod2]
+                                                      [--markdown]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+
+
+def load(mesh: str = "pod1", results: str = RESULTS):
+    cells = []
+    for f in sorted(glob.glob(os.path.join(results, f"*__{mesh}.json"))):
+        with open(f) as fh:
+            cells.append(json.load(fh))
+    return cells
+
+
+def row(c):
+    r = c["roofline"]
+    bound = max(r["compute_s"], r["memory_s"], r["collective_s"])
+    return dict(
+        cell=f"{c['arch']}/{c['shape']}",
+        compute_s=r["compute_s"], memory_s=r["memory_s"],
+        collective_s=r["collective_s"], dominant=r["dominant"],
+        bound_s=bound,
+        model_tflops=r["model_flops"] / 1e12,
+        useful=r["useful_flops_ratio"],
+        roofline_frac=r["roofline_fraction"],
+        mem_gb=c["memory"]["peak_bytes_per_device"] / 1e9,
+        fits=c["memory"]["fits_16GB"],
+    )
+
+
+def print_table(cells, markdown=False):
+    rows = [row(c) for c in cells]
+    hdr = ["cell", "compute_s", "memory_s", "collective_s", "dominant",
+           "useful", "roofline_frac", "mem_gb", "fits"]
+    if markdown:
+        print("| " + " | ".join(hdr) + " |")
+        print("|" + "---|" * len(hdr))
+        for r in rows:
+            print("| " + " | ".join(
+                (f"{r[h]:.4g}" if isinstance(r[h], float) else str(r[h]))
+                for h in hdr) + " |")
+    else:
+        print(",".join(hdr))
+        for r in rows:
+            print(",".join(
+                (f"{r[h]:.6g}" if isinstance(r[h], float) else str(r[h]))
+                for h in hdr))
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="pod1", choices=["pod1", "pod2"])
+    ap.add_argument("--markdown", action="store_true")
+    ap.add_argument("--results", default=RESULTS)
+    args = ap.parse_args()
+    cells = load(args.mesh, args.results)
+    if not cells:
+        raise SystemExit(f"no dry-run results under {args.results} "
+                         f"(run python -m repro.launch.dryrun --all first)")
+    rows = print_table(cells, args.markdown)
+    worst = min(rows, key=lambda r: r["roofline_frac"])
+    print(f"\n# worst roofline fraction: {worst['cell']} "
+          f"({worst['roofline_frac']:.4f})")
+    colls = [r for r in rows if r["dominant"] == "collective"]
+    if colls:
+        top = max(colls, key=lambda r: r["collective_s"])
+        print(f"# most collective-bound: {top['cell']} "
+              f"({top['collective_s']:.2f}s)")
+
+
+if __name__ == "__main__":
+    main()

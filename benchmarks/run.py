@@ -1,0 +1,54 @@
+"""Benchmark harness: one section per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run [--quick]
+
+Prints ``name,value,derived`` CSV. Roofline tables (from the dry-run) are
+produced by ``python -m benchmarks.roofline_report``; paper-claim benchmarks
+run here on the host CPU + the SALO cycle model.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="skip the slow measured-speedup benchmarks")
+    args = ap.parse_args()
+
+    from benchmarks import paper_claims
+
+    rows = []
+    paper_claims.sec63_sanger_comparison(rows)
+    paper_claims.table3_quantization(rows)
+    if not args.quick:
+        paper_claims.fig7_speedup(rows)
+        paper_claims.sec21_quadratic_scaling(rows)
+
+    print("name,value,derived")
+    for name, value, derived in rows:
+        print(f"{name},{value:.6g},{derived}")
+
+    # quick invariant checks so `benchmarks.run` doubles as a regression gate
+    d = {name: value for name, value, _ in rows}
+    failures = []
+    for k, v in d.items():
+        if k.endswith("pe_utilization") and v < 0.65:
+            failures.append((k, v, ">=0.65 (exact-mask convention)"))
+        if k.endswith("quant_rel_rmse") and v > 0.05:
+            failures.append((k, v, "<=0.05"))
+    if "sec63/salo_vs_sanger_speedup" in d and \
+            not 1.0 < d["sec63/salo_vs_sanger_speedup"] < 2.5:
+        failures.append(("sanger_speedup", d["sec63/salo_vs_sanger_speedup"],
+                         "in (1, 2.5)"))
+    if failures:
+        for f in failures:
+            print(f"CHECK-FAILED: {f}", file=sys.stderr)
+        raise SystemExit(1)
+    print("# all benchmark invariants hold")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,33 @@
+"""End-to-end training example: ~100M-param smollm-135m with SALO sliding
+window attention for a few hundred steps on synthetic Markov data; loss
+must drop substantially from the ~ln(V) start.
+
+  PYTHONPATH=src python examples/train_smollm.py [--steps 300]
+
+(Uses the full production path: repro.launch.train with checkpointing +
+straggler watchdog. On CPU this takes a few minutes; pass --smoke to run the
+reduced config in seconds.)
+"""
+import argparse
+import sys
+
+from repro.launch.train import main as train_main
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--smoke", action="store_true")
+    args = ap.parse_args()
+    argv = ["--arch", "smollm-135m", "--steps", str(args.steps),
+            "--seq", "128", "--batch", "4", "--lr", "1e-2",
+            "--data-branch", "2", "--data-docs", "8",
+            "--ckpt", "/tmp/salo_smollm_ckpt", "--ckpt-every", "100"]
+    if args.smoke:
+        argv.append("--smoke")
+    final_loss = train_main(argv)
+    # start ~= ln(49152) ~= 10.8 (unigram floor over the 4096 active states
+    # ~= 8.3); dropping well below the start proves real learning — full
+    # convergence toward the ln(2)=0.69 conditional entropy needs more
+    # tokens than a CPU example budget allows.
+    assert final_loss < 9.0, f"training did not learn: {final_loss}"
+    print("training example OK")

@@ -1,0 +1,39 @@
+"""Architecture registry: ``--arch <id>`` -> ModelConfig."""
+from repro.configs.base import (ModelConfig, MoEConfig, SSMConfig,
+                                RecurrentConfig, SALOConfig, ShapeCell,
+                                SHAPES, SHAPES_BY_NAME)
+
+ARCHS = (
+    "mamba2-370m", "arctic-480b", "kimi-k2-1t-a32b", "whisper-base",
+    "phi4-mini-3.8b", "smollm-135m", "granite-3-8b", "gemma-7b",
+    "qwen2-vl-2b", "recurrentgemma-9b", "longformer-4k",
+)
+
+_MODULES = {
+    "mamba2-370m": "mamba2_370m",
+    "arctic-480b": "arctic_480b",
+    "kimi-k2-1t-a32b": "kimi_k2_1t_a32b",
+    "whisper-base": "whisper_base",
+    "phi4-mini-3.8b": "phi4_mini_3_8b",
+    "smollm-135m": "smollm_135m",
+    "granite-3-8b": "granite_3_8b",
+    "gemma-7b": "gemma_7b",
+    "qwen2-vl-2b": "qwen2_vl_2b",
+    "recurrentgemma-9b": "recurrentgemma_9b",
+    "longformer-4k": "longformer_4k",
+}
+
+
+def _module(name: str):
+    import importlib
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; available: {ARCHS}")
+    return importlib.import_module(f"repro.configs.{_MODULES[name]}")
+
+
+def get_config(name: str) -> ModelConfig:
+    return _module(name).CONFIG
+
+
+def get_smoke(name: str) -> ModelConfig:
+    return _module(name).SMOKE

@@ -1,0 +1,17 @@
+# The paper's primary contribution: hybrid sparse attention (sliding window
+# + dilated window + global tokens) with SALO's data scheduler (splitting,
+# reordering) and renormalized merge, as composable JAX modules.
+from repro.core.patterns import (HybridSparsePattern, longformer,
+                                 causal_sliding_window, dilated_window, vil,
+                                 full)
+from repro.core.scheduler import BandSchedule, Band, schedule
+from repro.core.attention import hybrid_attention, hybrid_decode_attention
+from repro.core.blockwise import blockwise_attention, decode_attention
+from repro.core import renorm, quant
+
+__all__ = [
+    "HybridSparsePattern", "longformer", "causal_sliding_window",
+    "dilated_window", "vil", "full", "BandSchedule", "Band", "schedule",
+    "hybrid_attention", "hybrid_decode_attention", "blockwise_attention",
+    "decode_attention", "renorm", "quant",
+]

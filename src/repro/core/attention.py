@@ -1,0 +1,140 @@
+"""Public hybrid-sparse-attention API: one entry point, many engines.
+
+``hybrid_attention(q, k, v, pattern, impl=...)`` with q/k/v ``(B, H, N, D)``
+(batch, heads, seq, head_dim — the model-facing layout).
+
+Engines:
+  * ``dense_ref``          O(n^2) masked oracle (tests/small shapes)
+  * ``blockwise``          pure-JAX SALO schedule (training, dry-run) [default]
+  * ``pallas``             Pallas TPU kernel (real-hardware target)
+  * ``pallas_interpret``   same kernel, interpret mode (CPU numerics check)
+
+All engines are drop-in equivalent (tested to tolerance); training autodiffs
+through ``blockwise``; ``pallas`` installs a custom_vjp whose backward is the
+blockwise autodiff (see kernels/ops.py).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.patterns import HybridSparsePattern
+from repro.core.blockwise import blockwise_attention, decode_attention
+
+IMPLS = ("dense_ref", "blockwise", "pallas", "pallas_interpret")
+
+
+def hybrid_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                     pattern: HybridSparsePattern, *,
+                     impl: str = "blockwise",
+                     block_q: int = 128, block_k: int = 128,
+                     scale: Optional[float] = None) -> jax.Array:
+    """Hybrid sparse attention. q: (B, H, N, D); k/v: (B, Hkv, N, D).
+
+    GQA: if Hkv < H, KV heads are repeated to match (H % Hkv == 0).
+    """
+    B, H, N, D = q.shape
+    Hkv = k.shape[1]
+    if Hkv != H:
+        assert H % Hkv == 0, f"GQA heads {H} not divisible by kv heads {Hkv}"
+        rep = H // Hkv
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+
+    qf = q.reshape(B * H, N, D)
+    kf = k.reshape(B * H, N, D)
+    vf = v.reshape(B * H, N, D)
+
+    if impl == "dense_ref":
+        from repro.kernels.ref import reference_attention
+        out = reference_attention(qf, kf, vf, pattern, scale=scale)
+    elif impl == "blockwise":
+        out = blockwise_attention(qf, kf, vf, pattern, block_q=block_q,
+                                  block_k=block_k, scale=scale)
+    elif impl in ("pallas", "pallas_interpret"):
+        from repro.kernels.ops import salo_attention
+        out = salo_attention(qf, kf, vf, pattern, block_q=block_q,
+                             block_k=block_k, scale=scale,
+                             interpret=(impl == "pallas_interpret"))
+    else:
+        raise ValueError(f"unknown impl {impl!r}; choose from {IMPLS}")
+    return out.reshape(B, H, N, D)
+
+
+def hybrid_decode_attention(q: jax.Array, k_cache: jax.Array,
+                            v_cache: jax.Array, t, pattern, *,
+                            scale: Optional[float] = None,
+                            cache_positions=None,
+                            slice_window: bool = False) -> jax.Array:
+    """Single-token decode. q: (B, H, 1, D); caches: (B, Hkv, S, D).
+
+    GQA is computed with a grouped einsum — KV heads are NEVER repeated
+    (a `jnp.repeat` materializes rep x the cache and breaks seq-sharding
+    propagation under pjit; see EXPERIMENTS.md §Perf granite/long_500k).
+
+    ``slice_window=True`` (SALO windowed decode): read only the last
+    ``window`` cache slots + the global-token prefix instead of the whole
+    sequence — O(w) instead of O(n) HBM traffic per step, the serving-side
+    payoff of the paper's pattern. Requires the slot==position cache layout
+    (``cache_positions is None``).
+    """
+    from repro.core import renorm
+
+    B, H, _, D = q.shape
+    Hkv, S = k_cache.shape[1], k_cache.shape[2]
+    rep = H // Hkv
+    scale_ = (D ** -0.5) if scale is None else scale
+    qg = q.reshape(B, Hkv, rep, D)
+    p = pattern
+    a, _b = p.window
+    g = p.n_global
+
+    def grouped(kc, vc, pos_k, extra_mask=None):
+        """kc/vc: (B, Hkv, L, D); pos_k: (L,) -> (scores-masked) out parts."""
+        s = jnp.einsum("bgrd,bgsd->bgrs", qg, kc,
+                       preferred_element_type=jnp.float32) * scale_
+        pos_i = jnp.asarray(t, jnp.int32)
+        rel = pos_k - pos_i
+        m = (rel >= a) & (rel <= 0)  # decode: lookback window only
+        if p.dilation > 1:
+            m = m & (rel % p.dilation == 0)
+        if g > 0:
+            m = m | (pos_k < g)
+        m = m & (pos_k <= pos_i)  # decode is causal
+        if extra_mask is not None:
+            m = m & extra_mask
+        return jnp.where(m[None, None, None, :], s, renorm.NEG_INF)
+
+    if slice_window and cache_positions is None and a > -(1 << 29):
+        w = -a + 1
+        L = min(S, w)
+        start = jnp.clip(jnp.asarray(t, jnp.int32) - (L - 1), 0, S - L)
+        k_win = jax.lax.dynamic_slice_in_dim(k_cache, start, L, axis=2)
+        v_win = jax.lax.dynamic_slice_in_dim(v_cache, start, L, axis=2)
+        pos_win = start + jnp.arange(L, dtype=jnp.int32)
+        parts_k, parts_v, parts_s = [k_win], [v_win], []
+        s_win = grouped(k_win, v_win, pos_win)
+        parts_s.append(s_win)
+        if g > 0:
+            gp = min(g, S)
+            k_sink = k_cache[:, :, :gp]
+            v_sink = v_cache[:, :, :gp]
+            pos_sink = jnp.arange(gp, dtype=jnp.int32)
+            # exclude sink slots already inside the window slice
+            s_sink = grouped(k_sink, v_sink, pos_sink,
+                             extra_mask=pos_sink < start)
+            parts_s.insert(0, s_sink)
+            parts_k.insert(0, k_sink)
+            parts_v.insert(0, v_sink)
+        s = jnp.concatenate(parts_s, axis=-1)
+        vc = jnp.concatenate(parts_v, axis=2)
+    else:
+        pos_k = (jnp.arange(S, dtype=jnp.int32) if cache_positions is None
+                 else cache_positions.astype(jnp.int32))
+        s = grouped(k_cache, v_cache, pos_k)
+        vc = v_cache
+    wts = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bgrs,bgsd->bgrd", wts, vc.astype(wts.dtype))
+    return out.astype(q.dtype).reshape(B, H, 1, D)

@@ -1,0 +1,243 @@
+"""Banded blockwise attention in pure JAX — SALO's schedule on XLA.
+
+This is the *algorithmic twin* of the Pallas kernel: identical band walk,
+identical masks, identical renormalized merge. It exists because
+
+1. training needs autodiff (everything here is differentiable jnp),
+2. the CPU-only dry-run must lower something honest for roofline analysis
+   (Pallas TPU kernels cannot be lowered by the CPU backend).
+
+Shapes: q, k, v are ``(B, N, D)`` where ``B`` folds batch*heads. The public
+model-facing API lives in :mod:`repro.core.attention`.
+
+Complexity per band: O(N * (band_width + 2*block) * D) — linear in N, the
+paper's claim.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import renorm
+from repro.core.scheduler import BIG, Band, BandSchedule, _round_up, schedule
+from repro.core.patterns import HybridSparsePattern
+
+
+def _dot(a, b):
+    return jnp.einsum("...qd,...kd->...qk", a, b,
+                      preferred_element_type=jnp.float32)
+
+
+def _band_partial(state: renorm.PartialState, q_blk, k_pad, v_pad, pos_pad,
+                  sched: BandSchedule, band: Band, block_q: int, block_k: int,
+                  scale: float) -> renorm.PartialState:
+    """Fold one band into the running partial state.
+
+    q_blk: (B, nq, Bq, D); k_pad/v_pad: (B, n_pad, D); pos_pad: (n_pad,).
+    state: PartialState over (B, nq, Bq).
+
+    Fast path (Bq == Bk): the KV tile index for query block i at band step s
+    is ``i + lo//Bk + s`` — a CONSTANT shift per step — so the banded walk is
+    a sliced view of the padded KV stream, not a gather. No per-block index
+    materialization; XLA fuses the slice into the matmul operand
+    (EXPERIMENTS.md §Perf gemma/prefill_32k).
+    """
+    B, nq, Bq, D = q_blk.shape
+    n_pad = k_pad.shape[1]
+    nkb = n_pad // block_k
+    pos_q = pos_pad.reshape(nq, Bq)
+    steps = band.kv_steps(Bq, block_k)
+
+    # Working-space indices: restrict each pair to ITS band so overlapping
+    # tile walks of different bands (ViL's 15 bands) never double count.
+    wq = (jnp.arange(nq) * Bq)[:, None] + jnp.arange(Bq)[None, :]  # (nq, Bq)
+
+    def masked_update(st, scores, v_blk, blk, pos_k):
+        mask = sched.window_mask(pos_q[:, :, None], pos_k[:, None, :])
+        rel_w = (blk[:, None] * block_k + jnp.arange(block_k)[None, :]
+                 )[:, None, :] - wq[:, :, None]   # (nq, Bq, Bk) working rel
+        mask = mask & (rel_w >= band.lo) & (rel_w <= band.hi)
+        return renorm.update(st, scores, v_blk, mask[None])
+
+    if Bq == block_k:
+        import math as _math
+        c0 = _math.floor(band.lo / block_k)
+        c1 = c0 + steps - 1
+        lpad = max(0, -c0) * block_k
+        rpad = max(0, c1) * block_k
+        k_w = jnp.pad(k_pad, ((0, 0), (lpad, rpad), (0, 0)))
+        v_w = jnp.pad(v_pad, ((0, 0), (lpad, rpad), (0, 0)))
+        pos_w = jnp.pad(pos_pad, (lpad, rpad), constant_values=BIG)
+
+        def body(carry, s):
+            st = carry
+            start = (c0 + s) * block_k + lpad     # >= 0 by construction
+            k_blk = jax.lax.dynamic_slice_in_dim(
+                k_w, start, n_pad, axis=1).reshape(B, nq, block_k, D)
+            v_blk = jax.lax.dynamic_slice_in_dim(
+                v_w, start, n_pad, axis=1).reshape(B, nq, block_k, D)
+            pos_k = jax.lax.dynamic_slice_in_dim(
+                pos_w, start, n_pad).reshape(nq, block_k)
+            scores = _dot(q_blk, k_blk) * scale
+            blk = jnp.arange(nq, dtype=jnp.int32) + (c0 + s)
+            return masked_update(st, scores, v_blk, blk, pos_k), ()
+    else:
+        k_r = k_pad.reshape(B, nkb, block_k, D)
+        v_r = v_pad.reshape(B, nkb, block_k, D)
+        pos_r = pos_pad.reshape(nkb, block_k)
+        s0 = np.array([band.kv_start_block(i, Bq, block_k)
+                       for i in range(nq)])
+        s0 = jnp.asarray(s0, jnp.int32)
+
+        def body(carry, s):
+            st = carry
+            blk = s0 + s                          # (nq,) signed tile index
+            ok = (blk >= 0) & (blk < nkb)         # window-split validity
+            blk_c = jnp.clip(blk, 0, nkb - 1)
+            k_blk = jnp.take(k_r, blk_c, axis=1)  # (B, nq, Bk, D)
+            v_blk = jnp.take(v_r, blk_c, axis=1)
+            pos_k = jnp.take(pos_r, blk_c, axis=0)
+            pos_k = jnp.where(ok[:, None], pos_k, BIG)  # clamped dup guard
+            scores = _dot(q_blk, k_blk) * scale
+            return masked_update(st, scores, v_blk, blk, pos_k), ()
+
+    state, _ = jax.lax.scan(body, state, jnp.arange(steps, dtype=jnp.int32))
+    return state
+
+
+def _global_col_partial(state, q_blk, k_orig, v_orig, pos_pad, sched,
+                        block_k: int, scale: float):
+    """Global-column pass: every query vs. the first n_global ORIGINAL keys.
+
+    Mirrors SALO's global PE column tapping the un-reordered stream."""
+    B, nq, Bq, D = q_blk.shape
+    g = sched.n_global
+    gp = min(_round_up(max(g, 1), min(block_k, 128)), k_orig.shape[1])
+    kg = k_orig[:, :gp]
+    vg = v_orig[:, :gp]
+    pos_g = jnp.arange(gp, dtype=jnp.int32)
+    pos_q = pos_pad.reshape(nq, Bq)
+    scores = _dot(q_blk, kg[:, None]) * scale     # (B, nq, Bq, gp)
+    mask = sched.global_col_mask(pos_q[None, :, :, None],
+                                 pos_g[None, None, None, :])
+    mask = mask & (pos_g < g)[None, None, None, :]
+    return renorm.update(state, scores, vg[:, None], mask)
+
+
+def _global_rows(q_orig, k_orig, v_orig, sched, scale: float, out_dtype):
+    """Global-row pass: the first n_global queries attend ALL keys (original
+    order) — SALO's global PE row. Returns (B, g, D)."""
+    g = sched.n_global
+    n = sched.n
+    qg = q_orig[:, :g]
+    scores = _dot(qg, k_orig[:, :n]) * scale      # (B, g, n)
+    if sched.causal:
+        mask = (jnp.arange(n)[None, :] <= jnp.arange(g)[:, None])[None]
+        scores = jnp.where(mask, scores, renorm.NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("...qk,...kd->...qd", p,
+                      v_orig[:, :n].astype(p.dtype)).astype(out_dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("pattern", "block_q", "block_k",
+                                             "return_state"))
+def blockwise_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                        pattern: HybridSparsePattern, *,
+                        block_q: int = 128, block_k: int = 128,
+                        scale: Optional[float] = None,
+                        return_state: bool = False):
+    """Hybrid sparse attention via the SALO band schedule. q,k,v: (B, N, D)."""
+    B, N, D = q.shape
+    scale = (D ** -0.5) if scale is None else scale
+    sched = schedule(pattern, N)
+    out_dtype = q.dtype
+
+    # --- data reordering (dilation) ------------------------------------ #
+    if sched.reordered:
+        perm = jnp.asarray(sched.perm)
+        take = jnp.clip(perm, 0, N - 1)
+        pad_valid = (perm < N)[None, :, None]
+        qw = jnp.where(pad_valid, jnp.take(q, take, axis=1), 0)
+        kw = jnp.where(pad_valid, jnp.take(k, take, axis=1), 0)
+        vw = jnp.where(pad_valid, jnp.take(v, take, axis=1), 0)
+    else:
+        qw, kw, vw = q, k, v
+
+    # --- sequence splitting: pad to tile grid --------------------------- #
+    n_pad = _round_up(sched.n_work, max(block_q, block_k))
+    pad = n_pad - qw.shape[1]
+    if pad:
+        qw = jnp.pad(qw, ((0, 0), (0, pad), (0, 0)))
+        kw = jnp.pad(kw, ((0, 0), (0, pad), (0, 0)))
+        vw = jnp.pad(vw, ((0, 0), (0, pad), (0, 0)))
+    pos = np.full(n_pad, BIG, dtype=np.int32)
+    pos[: sched.n_work] = sched.positions()
+    pos = jnp.asarray(pos)
+
+    nq = n_pad // block_q
+    q_blk = qw.reshape(B, nq, block_q, D)
+
+    state = renorm.empty_state((B, nq, block_q), D)
+    for band in sched.bands:  # static unroll; ViL has 15, most LMs 1
+        state = _band_partial(state, q_blk, kw, vw, pos, sched, band,
+                              block_q, block_k, scale)
+    if sched.n_global > 0:
+        state = _global_col_partial(state, q_blk, k, v, pos, sched,
+                                    block_k, scale)
+
+    if return_state:
+        return state
+
+    out = renorm.finalize(state, out_dtype).reshape(B, n_pad, D)
+
+    # --- undo reordering / padding -------------------------------------- #
+    if sched.reordered:
+        inv = jnp.asarray(sched.inverse_perm())
+        out = jnp.take(out, inv, axis=1)
+    else:
+        out = out[:, :N]
+
+    # --- global rows (paper's global PE row) ----------------------------- #
+    if sched.n_global > 0 and sched.global_rows:
+        rows = _global_rows(q, k, v, sched, scale, out_dtype)
+        out = out.at[:, : sched.n_global].set(rows)
+    return out
+
+
+# ---------------------------------------------------------------------- #
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     t: jax.Array, pattern: HybridSparsePattern, *,
+                     scale: Optional[float] = None,
+                     cache_positions: Optional[jax.Array] = None) -> jax.Array:
+    """One-token decode against a KV cache (serve_step path).
+
+    q: (B, 1, D); caches: (B, S, D); ``t`` = current absolute position
+    (scalar int). ``cache_positions``: (S,) absolute position of each cache
+    slot (defaults to arange — the dense baseline cache); a SALO ring cache
+    passes its slot->position map here and everything still works because
+    masks are position-based.
+    """
+    B, S, D = k_cache.shape
+    scale = (D ** -0.5) if scale is None else scale
+    pos_k = (jnp.arange(S, dtype=jnp.int32) if cache_positions is None
+             else cache_positions.astype(jnp.int32))
+    pos_i = jnp.asarray(t, jnp.int32)
+
+    p = pattern
+    a, b = p.window
+    rel = pos_k - pos_i
+    m = (rel >= a) & (rel <= b)
+    if p.dilation > 1:
+        m = m & (rel % p.dilation == 0)
+    if p.n_global > 0:
+        m = m | (pos_k < p.n_global)
+    m = m & (pos_k <= pos_i)  # decode is causal by construction
+    scores = _dot(q, k_cache) * scale            # (B, 1, S)
+    scores = jnp.where(m[None, None, :], scores, renorm.NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bqs,bsd->bqd", w,
+                      v_cache.astype(w.dtype)).astype(q.dtype)

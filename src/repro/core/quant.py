@@ -1,0 +1,73 @@
+"""Fixed-point quantization simulation (paper §6.4).
+
+SALO quantizes Q, K, V to **int8 with 4 fractional bits** (scale 2^-4, range
+[-8, 7.9375]) and produces 16-bit outputs; the paper shows accuracy within
+noise of fp32 after quantization-aware finetuning (Table 3).
+
+We simulate the exact fixed-point grid (not per-tensor dynamic scaling — the
+ASIC's format is static) plus an optional dynamic per-tensor variant that a
+TPU int8 path would use. ``quantized_attention`` runs any attention engine on
+the quantized grid to measure the end-to-end output error (Table 3 analog in
+benchmarks/quantization.py).
+
+STE (straight-through estimator) gradients make the simulation usable inside
+quantization-aware finetuning, mirroring the paper's QAT setup.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+FRAC_BITS = 4
+SCALE = 2.0 ** FRAC_BITS  # paper: 4-bit fraction
+QMIN, QMAX = -128, 127
+
+
+@jax.custom_vjp
+def fixed_point_q8(x: jax.Array) -> jax.Array:
+    """Round to the int8(4-frac) fixed-point grid. Shape-preserving."""
+    q = jnp.clip(jnp.round(x * SCALE), QMIN, QMAX)
+    return (q / SCALE).astype(x.dtype)
+
+
+def _fp_fwd(x):
+    return fixed_point_q8(x), ()
+
+
+def _fp_bwd(_, g):
+    return (g,)  # STE
+
+
+fixed_point_q8.defvjp(_fp_fwd, _fp_bwd)
+
+
+def dynamic_q8(x: jax.Array, axis=None):
+    """Per-tensor (or per-``axis``) dynamic int8: returns (int8, scale)."""
+    amax = jnp.max(jnp.abs(x), axis=axis, keepdims=axis is not None)
+    scale = jnp.maximum(amax, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(x / scale), QMIN, QMAX).astype(jnp.int8)
+    return q, scale
+
+
+def dequant(q: jax.Array, scale: jax.Array, dtype=jnp.float32) -> jax.Array:
+    return q.astype(dtype) * scale
+
+
+def quantized_attention(q, k, v, pattern, *, impl: str = "blockwise",
+                        mode: str = "fixed", **kw):
+    """Attention on the quantized grid (paper's deployment numerics).
+
+    mode='fixed'   int8 with 4-bit fraction (the ASIC's format)
+    mode='dynamic' per-tensor dynamic int8 (TPU-style)
+    """
+    from repro.core.attention import hybrid_attention
+
+    if mode == "fixed":
+        qq, kq, vq = fixed_point_q8(q), fixed_point_q8(k), fixed_point_q8(v)
+    elif mode == "dynamic":
+        qq = dequant(*dynamic_q8(q), dtype=q.dtype)
+        kq = dequant(*dynamic_q8(k), dtype=k.dtype)
+        vq = dequant(*dynamic_q8(v), dtype=v.dtype)
+    else:
+        raise ValueError(mode)
+    return hybrid_attention(qq, kq, vq, pattern, impl=impl, **kw)

@@ -1,0 +1,97 @@
+"""Renormalized merge of partial attention outputs (paper Eq. 2 / App. A).
+
+SALO's window splitting computes, for each query row i, partial results over
+disjoint key sets T_k with per-part weight W_k = sum_{j in T_k} exp(S_ij), and
+recovers the exact output as   out_i = sum_k (W_k / sum W) * out_i^k.
+
+On hardware this is the "weighted sum module". In float we carry a running
+max `m` for stability (the fixed-point ASIC skips it; see DESIGN.md §2), so a
+partial is the classic online-softmax triple:
+
+    state = (acc, m, l)     acc = sum_j exp(S_ij - m) * v_j     (unnormalized)
+                            m   = max_j S_ij
+                            l   = sum_j exp(S_ij - m)
+
+``merge`` is associative and commutative (property-tested), which is what
+legalizes every level of splitting: KV tiles inside a kernel, multi-band
+passes, and cross-device sequence parallelism.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30  # large-negative instead of -inf: keeps 0*inf NaNs away
+
+
+class PartialState(NamedTuple):
+    """Partial attention for a block of queries. Shapes:
+    acc: (..., q, d) f32, m: (..., q) f32, l: (..., q) f32."""
+    acc: jax.Array
+    m: jax.Array
+    l: jax.Array
+
+
+def empty_state(q_shape, d: int, dtype=jnp.float32) -> PartialState:
+    """Identity element of ``merge`` (zero weight, -inf max)."""
+    return PartialState(
+        acc=jnp.zeros((*q_shape, d), dtype),
+        m=jnp.full(q_shape, NEG_INF, dtype),
+        l=jnp.zeros(q_shape, dtype),
+    )
+
+
+def merge(a: PartialState, b: PartialState) -> PartialState:
+    """Exact merge of two disjoint-key partials (paper Eq. 2, stabilized)."""
+    m = jnp.maximum(a.m, b.m)
+    ca = jnp.exp(a.m - m)
+    cb = jnp.exp(b.m - m)
+    return PartialState(
+        acc=a.acc * ca[..., None] + b.acc * cb[..., None],
+        m=m,
+        l=a.l * ca + b.l * cb,
+    )
+
+
+def update(state: PartialState, scores: jax.Array, v: jax.Array,
+           mask: jax.Array | None = None) -> PartialState:
+    """Fold one KV tile into the running state (the in-kernel step).
+
+    scores: (..., q, k) f32 logits; v: (..., k, d); mask True = attend.
+    """
+    if mask is not None:
+        scores = jnp.where(mask, scores, NEG_INF)
+    m_tile = jnp.max(scores, axis=-1)
+    m_new = jnp.maximum(state.m, m_tile)
+    # Guard: if a row has no valid key anywhere yet, m_new stays NEG_INF and
+    # exp(scores - m_new) could overflow; clamp the shift.
+    shift = jnp.where(m_new <= NEG_INF / 2, 0.0, m_new)
+    p = jnp.exp(scores - shift[..., None])
+    if mask is not None:
+        p = jnp.where(mask, p, 0.0)
+    corr = jnp.exp(jnp.where(state.m <= NEG_INF / 2, NEG_INF, state.m) - shift)
+    corr = jnp.where(state.m <= NEG_INF / 2, 0.0, corr)
+    # PV contraction in V's dtype (bf16 on TPU -> MXU-native, half the
+    # operand bytes), f32 accumulation — standard flash-attention numerics.
+    pv = jnp.einsum("...qk,...kd->...qd", p.astype(v.dtype), v,
+                    preferred_element_type=jnp.float32)
+    return PartialState(
+        acc=state.acc * corr[..., None] + pv,
+        m=m_new,
+        l=state.l * corr + jnp.sum(p, axis=-1),
+    )
+
+
+def finalize(state: PartialState, dtype=None) -> jax.Array:
+    """Normalize: out = acc / l. Rows that attended nothing produce zeros."""
+    l = jnp.where(state.l == 0.0, 1.0, state.l)
+    out = state.acc / l[..., None]
+    return out.astype(dtype) if dtype is not None else out
+
+
+def weights(state: PartialState) -> jax.Array:
+    """The paper's W (softmax denominator) in log space: logsumexp row weight."""
+    safe_l = jnp.maximum(state.l, 1e-30)
+    return state.m + jnp.log(safe_l)

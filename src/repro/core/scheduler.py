@@ -1,0 +1,207 @@
+"""Data scheduler (paper §4): pattern -> executable band schedule.
+
+Transforms a :class:`HybridSparsePattern` into the form the compute engines
+(blockwise JAX / Pallas kernel) execute directly:
+
+* **data reordering** (paper §4.2): dilation-``d`` patterns are turned into
+  plain sliding windows by the stride-``d`` permutation that groups
+  ``q_i, q_{i+d}, q_{i+2d}, ...``. Masks downstream are always evaluated on
+  *original* positions carried through the permutation, so reordering only
+  changes locality, never semantics.
+* **band lowering**: 2-D (ViL) windows become a union of 1-D bands, one per
+  row offset ``dy``: ``[dy*W - ww//2, dy*W + ww//2]``.
+* **data splitting** (paper §4.2): sequence splitting = query blocks of
+  ``block_q``; window splitting = KV tiles of ``block_k`` merged with the
+  renormalization of :mod:`repro.core.renorm`.
+
+The schedule is pure static metadata (numpy only) — safe to build at trace
+time and cache.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Optional, Tuple
+
+import numpy as np
+
+from repro.core.patterns import HybridSparsePattern
+
+# Sentinel original-position for padding slots. Must fit int32 (JAX default
+# integer width) *and* keep pos_j - pos_i inside int32 — any mask comparison
+# against it must fail via the `pos < n` in-range guard.
+BIG = 2 ** 31 - 2 ** 20
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+@dataclasses.dataclass(frozen=True)
+class Band:
+    """One working-space band: queries attend keys with lo <= j - i <= hi."""
+    lo: int
+    hi: int
+
+    def kv_steps(self, block_q: int, block_k: int) -> int:
+        """KV tiles a query block touches for this band (window splitting)."""
+        span = (block_q - 1) + (self.hi - self.lo)
+        return span // block_k + 2  # +2: start misalignment + inclusive end
+
+    def kv_start_block(self, q_block: int, block_q: int, block_k: int) -> int:
+        """First (possibly negative, unclamped) KV tile for query block."""
+        return math.floor((q_block * block_q + self.lo) / block_k)
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class BandSchedule:
+    n: int                      # original sequence length
+    n_work: int                 # length after dilation padding (= len(perm))
+    bands: Tuple[Band, ...]     # working-space bands (dilation removed)
+    perm: Optional[np.ndarray]  # working slot -> original position, or None
+    n_global: int
+    global_rows: bool
+    causal: bool
+    pattern: HybridSparsePattern
+
+    # A schedule is a pure function of (pattern, n): hash/eq on those so the
+    # numpy perm array doesn't break jit static-arg hashing.
+    def __hash__(self):
+        return hash((self.n, self.pattern))
+
+    def __eq__(self, other):
+        return (isinstance(other, BandSchedule)
+                and self.n == other.n and self.pattern == other.pattern)
+
+    # ------------------------------------------------------------------ #
+    @property
+    def reordered(self) -> bool:
+        return self.perm is not None
+
+    def positions(self) -> np.ndarray:
+        """Original position of each working slot (BIG for padding)."""
+        if self.perm is None:
+            pos = np.arange(self.n_work, dtype=np.int32)
+            pos[self.n :] = BIG
+            return pos
+        pos = self.perm.astype(np.int32).copy()
+        pos[pos >= self.n] = BIG
+        return pos
+
+    def inverse_perm(self) -> Optional[np.ndarray]:
+        """original position -> working slot (length n)."""
+        if self.perm is None:
+            return None
+        inv = np.full(self.n, -1, dtype=np.int32)
+        valid = self.perm < self.n
+        inv[self.perm[valid]] = np.nonzero(valid)[0]
+        assert (inv >= 0).all()
+        return inv
+
+    # ------------------------------------------------------------------ #
+    def window_mask(self, pos_i, pos_j):
+        """Window-only validity from ORIGINAL positions (jnp-compatible).
+
+        Covers the windowed/dilated/2-D part of the pattern plus causality —
+        NOT the global row/column (handled by separate partials). Padding
+        (pos == BIG) fails automatically because BIG is out of every window.
+        """
+        import jax.numpy as jnp
+
+        p = self.pattern
+        pos_i = jnp.asarray(pos_i)
+        pos_j = jnp.asarray(pos_j)
+        in_range = (pos_i < self.n) & (pos_j < self.n)
+        if p.is_2d:
+            g = p.n_global
+            h, w = p.grid2d
+            wh, ww = p.window2d
+            yi, xi = (pos_i - g) // w, (pos_i - g) % w
+            yj, xj = (pos_j - g) // w, (pos_j - g) % w
+            m = (jnp.abs(yj - yi) <= wh // 2) & (jnp.abs(xj - xi) <= ww // 2)
+            m = m & (pos_i >= g) & (pos_j >= g)
+        else:
+            a, b = p.window
+            rel = pos_j - pos_i
+            m = (rel >= a) & (rel <= b)
+            if p.dilation > 1:
+                m = m & (rel % p.dilation == 0)
+        if self.causal:
+            m = m & (pos_j <= pos_i)
+        return m & in_range
+
+    def global_col_mask(self, pos_i, pos_j):
+        """Validity of the global-column partial: key is global, and the pair
+        is NOT already covered by the window (no double counting)."""
+        import jax.numpy as jnp
+
+        g = self.n_global
+        pos_i = jnp.asarray(pos_i)
+        pos_j = jnp.asarray(pos_j)
+        m = (pos_j < g) & (pos_i < self.n)
+        if self.causal:
+            m = m & (pos_j <= pos_i)
+        return m & ~self.window_mask(pos_i, pos_j)
+
+    # ------------------------------------------------------------------ #
+    def work_estimate(self, block_q: int, block_k: int) -> dict:
+        """Tile-level work accounting (drives the utilization benchmark)."""
+        n_pad = _round_up(self.n_work, max(block_q, block_k))
+        nq = n_pad // block_q
+        steps = sum(b.kv_steps(block_q, block_k) for b in self.bands)
+        tile_flops = 4 * block_q * block_k  # qk + pv MACs per (i,j) pair *2
+        useful = int(self.pattern.mask(self.n).sum())
+        executed = nq * steps * block_q * block_k
+        return dict(
+            q_blocks=nq, kv_steps_per_q_block=steps,
+            executed_pairs=executed, useful_pairs=useful,
+            utilization=useful / max(executed, 1), tile_flops=tile_flops,
+        )
+
+
+# ---------------------------------------------------------------------- #
+@functools.lru_cache(maxsize=256)
+def schedule(pattern: HybridSparsePattern, n: int) -> BandSchedule:
+    """Lower a pattern at sequence length ``n`` into a band schedule."""
+    if pattern.is_2d:
+        exp = pattern.seq_len()
+        if n != exp:
+            raise ValueError(f"2-D pattern implies n={exp}, got {n}")
+        _, w = pattern.grid2d
+        wh, ww = pattern.window2d
+        bands = tuple(
+            Band(dy * w - ww // 2, dy * w + ww // 2)
+            for dy in range(-(wh // 2), wh // 2 + 1)
+        )
+        return BandSchedule(n=n, n_work=n, bands=bands, perm=None,
+                            n_global=pattern.n_global,
+                            global_rows=pattern.global_rows,
+                            causal=pattern.causal, pattern=pattern)
+
+    a, b = pattern.window
+    d = pattern.dilation
+    if d == 1:
+        lo = max(a, -(n - 1))
+        hi = min(b, n - 1)
+        if pattern.causal:
+            hi = min(hi, 0)
+        return BandSchedule(n=n, n_work=n, bands=(Band(lo, hi),), perm=None,
+                            n_global=pattern.n_global,
+                            global_rows=pattern.global_rows,
+                            causal=pattern.causal, pattern=pattern)
+
+    # --- data reordering (paper §4.2): stride-d permutation ------------- #
+    if a % d or b % d:
+        raise ValueError(f"dilated window offsets ({a},{b}) must be multiples"
+                         f" of dilation {d}")
+    n_work = _round_up(n, d)
+    perm = np.concatenate([np.arange(r, n_work, d) for r in range(d)])
+    lo = max(a // d, -(n_work // d - 1))
+    hi = min(b // d, n_work // d - 1)
+    if pattern.causal:
+        hi = min(hi, 0)
+    return BandSchedule(n=n, n_work=n_work, bands=(Band(lo, hi),), perm=perm,
+                        n_global=pattern.n_global,
+                        global_rows=pattern.global_rows,
+                        causal=pattern.causal, pattern=pattern)

@@ -1,0 +1,2 @@
+from repro.ft.checkpoint import CheckpointManager, save, restore, latest_step
+from repro.ft.manager import StragglerWatchdog, run_with_restarts, reshard

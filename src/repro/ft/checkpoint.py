@@ -1,0 +1,147 @@
+"""Checkpointing: atomic, keep-k, async, mesh-portable.
+
+Design points for 1000+-node runs:
+  * **Atomic**: write to ``<dir>/tmp.<step>`` then ``os.rename`` — a
+    preempted writer never corrupts the latest checkpoint.
+  * **Keep-k GC**: bounded disk usage under frequent checkpoints.
+  * **Async**: the device->host copy is synchronous (cheap) but serialization
+    happens on a background thread, overlapping the next train steps.
+  * **Mesh-portable**: checkpoints store plain host numpy per leaf (gathered)
+    plus the pytree structure; ``restore(..., shardings=...)`` re-places onto
+    ANY mesh — this is the elastic-rescale path (tested 8 -> 4 devices).
+
+On a real multi-host pod each host would write only its addressable shards
+(same layout, one subdir per host); single-process here, so the gather is a
+no-op device->host copy.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import threading
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+_SEP = "::"
+
+
+def _flatten(tree, upcast: bool = True):
+    """Flatten to {path: np.array}. ``upcast`` converts ml_dtypes leaves
+    (bf16/f8 — npz-unsafe) to float32; restore() recasts to the original
+    dtype, which it reads from the un-upcast `like` tree."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = _SEP.join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in path)
+        arr = np.asarray(leaf)
+        if upcast and arr.dtype.kind not in "fiub?":
+            arr = arr.astype(np.float32)
+        out[key] = arr
+    return out, treedef
+
+
+def save(path: str, tree: Any, step: int) -> str:
+    """Atomic checkpoint write. Returns the final directory."""
+    final = os.path.join(path, f"step_{step:08d}")
+    tmp = os.path.join(path, f"tmp.{step}.{os.getpid()}")
+    os.makedirs(tmp, exist_ok=True)
+    flat, _ = _flatten(tree)
+    np.savez(os.path.join(tmp, "arrays.npz"), **flat)
+    meta = {"step": step, "keys": sorted(flat.keys())}
+    with open(os.path.join(tmp, "meta.json"), "w") as f:
+        json.dump(meta, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    return final
+
+
+def latest_step(path: str) -> Optional[int]:
+    if not os.path.isdir(path):
+        return None
+    steps = [int(m.group(1)) for d in os.listdir(path)
+             if (m := re.fullmatch(r"step_(\d+)", d))]
+    return max(steps) if steps else None
+
+
+def restore(path: str, like: Any, step: Optional[int] = None,
+            shardings: Any = None) -> Any:
+    """Restore into the structure of ``like``. ``shardings`` (same pytree
+    structure, or None) places each leaf onto the target mesh — the same
+    checkpoint restores onto any device topology (elastic rescale)."""
+    if step is None:
+        step = latest_step(path)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint under {path}")
+    d = os.path.join(path, f"step_{step:08d}")
+    data = np.load(os.path.join(d, "arrays.npz"))
+    flat_like, treedef = _flatten(like, upcast=False)
+    missing = set(flat_like) - set(data.files)
+    if missing:
+        raise ValueError(f"checkpoint missing keys: {sorted(missing)[:5]}...")
+    shard_flat = (jax.tree.leaves(shardings) if shardings is not None
+                  else [None] * len(flat_like))
+    leaves = []
+    for key, sh in zip(sorted(flat_like.keys()), shard_flat):
+        arr = data[key]
+        like_leaf = flat_like[key]
+        arr = arr.astype(like_leaf.dtype)
+        if sh is not None:
+            leaves.append(jax.device_put(arr, sh))
+        else:
+            leaves.append(jax.numpy.asarray(arr))
+    # sorted(keys) matches tree_flatten order for dict-only trees; rebuild:
+    order = {k: i for i, k in enumerate(sorted(flat_like.keys()))}
+    flat_keys = list(flat_like.keys())
+    rebuilt = [leaves[order[k]] for k in flat_keys]
+    return jax.tree_util.tree_unflatten(treedef, rebuilt)
+
+
+class CheckpointManager:
+    """keep-k GC + async background writes + restart bookkeeping."""
+
+    def __init__(self, path: str, keep: int = 3, async_write: bool = True):
+        self.path = path
+        self.keep = keep
+        self.async_write = async_write
+        self._thread: Optional[threading.Thread] = None
+        os.makedirs(path, exist_ok=True)
+
+    def _gc(self):
+        steps = sorted(int(m.group(1)) for d in os.listdir(self.path)
+                       if (m := re.fullmatch(r"step_(\d+)", d)))
+        for s in steps[: -self.keep] if self.keep else []:
+            shutil.rmtree(os.path.join(self.path, f"step_{s:08d}"),
+                          ignore_errors=True)
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def save(self, tree: Any, step: int):
+        self.wait()
+        # Synchronous device->host snapshot (consistent view), async write.
+        host_tree = jax.tree.map(lambda x: np.asarray(x), tree)
+
+        def work():
+            save(self.path, host_tree, step)
+            self._gc()
+
+        if self.async_write:
+            self._thread = threading.Thread(target=work, daemon=True)
+            self._thread.start()
+        else:
+            work()
+
+    def restore_latest(self, like: Any, shardings: Any = None):
+        self.wait()
+        step = latest_step(self.path)
+        if step is None:
+            return None, None
+        return restore(self.path, like, step, shardings), step

@@ -1,0 +1,91 @@
+"""Run manager: straggler watchdog, failure/restart loop, elastic rescale.
+
+What actually runs on the fleet:
+
+* **StragglerWatchdog** — per-step wall-time EWMA; a step exceeding
+  ``threshold x`` the EWMA is flagged (on a real pod this triggers hot-spare
+  swap / re-slicing; here it's surfaced in metrics and tested by injection).
+* **run_with_restarts** — the supervisor loop: run step fn, on (injected or
+  real) failure restore the latest checkpoint and continue. Together with
+  atomic checkpoints this gives at-most-one-interval loss of work.
+* **elastic rescale** — because checkpoints are mesh-portable
+  (ft/checkpoint.py), a job interrupted on mesh A restarts on mesh B with a
+  different device count; ``reshard`` re-places a live pytree.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Optional
+
+import jax
+
+
+@dataclasses.dataclass
+class StragglerWatchdog:
+    threshold: float = 3.0      # x EWMA counts as straggler
+    alpha: float = 0.1          # EWMA smoothing
+    warmup_steps: int = 3       # compile steps excluded
+    _ewma: Optional[float] = None
+    _seen: int = 0
+    events: int = 0
+
+    def observe(self, step_time: float) -> bool:
+        """Record one step; True if flagged as straggler."""
+        self._seen += 1
+        if self._seen <= self.warmup_steps:
+            return False
+        if self._ewma is None:
+            self._ewma = step_time
+            return False
+        flagged = step_time > self.threshold * self._ewma
+        if flagged:
+            self.events += 1
+        else:  # stragglers don't poison the baseline
+            self._ewma = (1 - self.alpha) * self._ewma + self.alpha * step_time
+        return flagged
+
+
+def reshard(tree: Any, shardings: Any) -> Any:
+    """Re-place a live pytree onto new shardings (elastic rescale)."""
+    return jax.tree.map(
+        lambda x, s: jax.device_put(jax.numpy.asarray(x), s),
+        tree, shardings)
+
+
+def run_with_restarts(step_fn: Callable, state: Any, n_steps: int,
+                      manager, *, checkpoint_every: int = 50,
+                      fail_at: Optional[set] = None,
+                      watchdog: Optional[StragglerWatchdog] = None,
+                      start_step: int = 0):
+    """Supervisor loop with checkpoint/restart semantics.
+
+    ``step_fn(state, step) -> state``; ``fail_at``: steps at which to inject
+    a failure (tests). Returns (state, history dict).
+    """
+    fail_at = set(fail_at or ())
+    history = {"restarts": 0, "straggler_events": 0, "steps_run": 0}
+    step = start_step
+    while step < n_steps:
+        try:
+            t0 = time.perf_counter()
+            if step in fail_at:
+                fail_at.discard(step)
+                raise RuntimeError(f"injected failure at step {step}")
+            state = step_fn(state, step)
+            dt = time.perf_counter() - t0
+            if watchdog is not None and watchdog.observe(dt):
+                history["straggler_events"] += 1
+            history["steps_run"] += 1
+            if checkpoint_every and (step + 1) % checkpoint_every == 0:
+                manager.save(state, step + 1)
+            step += 1
+        except RuntimeError:
+            history["restarts"] += 1
+            restored, ck_step = manager.restore_latest(state)
+            if restored is None:
+                step = start_step  # no checkpoint yet: restart from scratch
+            else:
+                state, step = restored, ck_step
+    manager.wait()
+    return state, history

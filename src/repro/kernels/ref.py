@@ -1,0 +1,34 @@
+"""Pure-jnp dense-masked oracle for hybrid sparse attention.
+
+O(n^2) memory — the ground truth every implementation (blockwise JAX and the
+Pallas kernel) is tested against. Materializes the pattern mask directly from
+:meth:`HybridSparsePattern.mask`.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.patterns import HybridSparsePattern
+
+NEG_INF = -1e30
+
+
+def reference_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                        pattern: HybridSparsePattern, *,
+                        scale: Optional[float] = None) -> jax.Array:
+    """q, k, v: (B, N, D) with B folding batch*heads."""
+    B, N, D = q.shape
+    scale = (D ** -0.5) if scale is None else scale
+    mask = jnp.asarray(np.asarray(pattern.mask(N)))
+    s = jnp.einsum("bqd,bkd->bqk", q, k,
+                   preferred_element_type=jnp.float32) * scale
+    s = jnp.where(mask[None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    # Rows with no attended key (possible for exotic patterns): zero them.
+    any_valid = mask.any(axis=-1)
+    p = jnp.where(any_valid[None, :, None], p, 0.0)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(p.dtype)).astype(q.dtype)

@@ -1,0 +1,126 @@
+"""SALO single-token decode kernel (Pallas, TPU target).
+
+One new token against the SALO ring cache (``g`` sink slots + ``w``-slot
+ring): the kernel streams cache tiles through VMEM past the resident grouped
+query (GQA: rep = H/Hkv query rows share each KV head — no KV repeat), with
+the usual online-softmax scratch. Slot validity comes from the slot-position
+array, so ring indexing is transparent (exactly like the jnp engine).
+
+Grid: ``(B, Hkv, n_slot_tiles)`` — last dim sequential.
+Validated in interpret mode against `core.attention.hybrid_decode_attention`
+(tests/test_decode_kernel.py).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.patterns import HybridSparsePattern
+
+NEG_INF = -1e30
+LANES = 128
+
+
+def _kernel(t_ref, q_ref, k_ref, v_ref, pos_ref, out_ref,
+            acc_ref, m_scr, l_scr, *, pattern: HybridSparsePattern,
+            block_s: int, steps: int, scale: float):
+    s = pl.program_id(2)
+
+    @pl.when(s == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+
+    q = q_ref[0, 0]                                   # (rep, hd)
+    k = k_ref[0, 0]                                   # (Bs, hd)
+    scores = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale   # (rep, Bs)
+
+    t = t_ref[0]
+    pos_k = pos_ref[0]                                # (Bs,) int32
+    a, _ = pattern.window
+    g = pattern.n_global
+    rel = pos_k - t
+    mask = (rel >= a) & (rel <= 0)
+    if pattern.dilation > 1:
+        mask = mask & (rel % pattern.dilation == 0)
+    if g > 0:
+        mask = mask | (pos_k < g)
+    mask = mask & (pos_k <= t)
+    scores = jnp.where(mask[None, :], scores, NEG_INF)
+
+    m_prev = m_scr[...][:, :1]
+    m_new = jnp.maximum(m_prev, jnp.max(scores, axis=-1, keepdims=True))
+    shift = jnp.where(m_new <= NEG_INF / 2, 0.0, m_new)
+    p = jnp.where(mask[None, :], jnp.exp(scores - shift), 0.0)
+    corr = jnp.where(m_prev <= NEG_INF / 2, 0.0, jnp.exp(m_prev - shift))
+    v = v_ref[0, 0]
+    pv = jax.lax.dot_general(p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    acc_ref[...] = acc_ref[...] * corr + pv
+    l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
+    m_scr[...] = jnp.broadcast_to(m_new, m_scr.shape)
+
+    @pl.when(s == steps - 1)
+    def _fin():
+        l = l_scr[...][:, :1]
+        out_ref[0, 0] = (acc_ref[...] /
+                         jnp.where(l == 0.0, 1.0, l)).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("pattern", "block_s", "scale",
+                                             "interpret"))
+def salo_decode(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                positions: jax.Array, t, *, pattern: HybridSparsePattern,
+                block_s: int = 128, scale: Optional[float] = None,
+                interpret: bool = False) -> jax.Array:
+    """q: (B, H, 1, hd); caches: (B, Hkv, S, hd); positions: (S,) absolute
+    position per slot (huge sentinel = empty). Returns (B, H, 1, hd)."""
+    B, H, _, hd = q.shape
+    Hkv, S = k_cache.shape[1], k_cache.shape[2]
+    rep = H // Hkv
+    scale_ = (hd ** -0.5) if scale is None else scale
+    S_pad = -(-S // block_s) * block_s
+    if S_pad != S:
+        padc = ((0, 0), (0, 0), (0, S_pad - S), (0, 0))
+        k_cache = jnp.pad(k_cache, padc)
+        v_cache = jnp.pad(v_cache, padc)
+        positions = jnp.pad(positions, (0, S_pad - S),
+                            constant_values=2 ** 30 - 2 ** 20)
+    steps = S_pad // block_s
+    qg = q.reshape(B, Hkv, rep, hd)
+    pos2d = positions.reshape(steps, block_s)
+    t_arr = jnp.asarray(t, jnp.int32)[None]
+
+    kern = functools.partial(_kernel, pattern=pattern, block_s=block_s,
+                             steps=steps, scale=scale_)
+    out = pl.pallas_call(
+        kern,
+        grid=(B, Hkv, steps),
+        in_specs=[
+            pl.BlockSpec((1,), lambda b, h, s: (0,)),                 # t
+            pl.BlockSpec((1, 1, rep, hd), lambda b, h, s: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, block_s, hd), lambda b, h, s: (b, h, s, 0)),
+            pl.BlockSpec((1, 1, block_s, hd), lambda b, h, s: (b, h, s, 0)),
+            pl.BlockSpec((1, block_s), lambda b, h, s: (s, 0)),       # pos
+        ],
+        out_specs=pl.BlockSpec((1, 1, rep, hd), lambda b, h, s: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, rep, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((rep, hd), jnp.float32),
+            pltpu.VMEM((rep, LANES), jnp.float32),
+            pltpu.VMEM((rep, LANES), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+        name="salo_decode",
+    )(t_arr, qg, k_cache, v_cache, pos2d)
+    return out.reshape(B, H, 1, hd)

@@ -1,0 +1,140 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import (jax locks device count on first init).
+
+"""Multi-pod dry-run: lower + compile every (arch x shape) cell on the
+production meshes and extract the roofline terms.
+
+  PYTHONPATH=src python -m repro.launch.dryrun --arch gemma-7b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multipod] [--force]
+
+Per cell: jit(step).lower(**ShapeDtypeStructs) -> .compile() ->
+memory_analysis() (bytes/device: proves it fits) + cost_analysis() (FLOPs,
+bytes) + HLO collective parse -> results/dryrun/<cell>.json. Resumable —
+existing JSONs are skipped unless --force.
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs import ARCHS, get_config
+from repro.configs.base import SHAPES, SHAPES_BY_NAME
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import build_cell
+from repro.roofline import analysis
+
+ASSIGNED = tuple(a for a in ARCHS if a != "longformer-4k")
+RESULTS = os.path.join(os.path.dirname(__file__), "../../..", "results",
+                       "dryrun")
+
+
+def cell_id(arch: str, shape: str, multi_pod: bool) -> str:
+    return f"{arch}__{shape}__{'pod2' if multi_pod else 'pod1'}"
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             results_dir: str = RESULTS, force: bool = False,
+             keep_hlo: bool = False) -> dict:
+    os.makedirs(results_dir, exist_ok=True)
+    cid = cell_id(arch, shape_name, multi_pod)
+    out_path = os.path.join(results_dir, cid + ".json")
+    if os.path.exists(out_path) and not force:
+        with open(out_path) as f:
+            return json.load(f)
+
+    cfg = get_config(arch)
+    shape = SHAPES_BY_NAME[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.devices.size
+    t0 = time.time()
+
+    fn, args, in_sh, out_sh, rules = build_cell(cfg, shape, mesh)
+    with mesh:
+        jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                         donate_argnums=getattr(fn, "donate_argnums", ()))
+        lowered = jitted.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo = compiled.as_text()
+
+    roof = analysis.analyze(cost, hlo, n_chips,
+                            analysis.model_flops(cfg, shape))
+    result = {
+        "cell": cid, "arch": arch, "shape": shape_name,
+        "mesh": list(mesh.devices.shape), "n_chips": n_chips,
+        "rules": {k: (list(v) if isinstance(v, tuple) else v)
+                  for k, v in rules.items()},
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "peak_bytes_per_device": (mem.argument_size_in_bytes
+                                      + mem.temp_size_in_bytes),
+            "fits_16GB": (mem.argument_size_in_bytes
+                          + mem.temp_size_in_bytes) < 16e9,
+        },
+        "roofline": roof.to_dict(),
+        "n_params": cfg.n_params(),
+        "n_active_params": cfg.n_active_params(),
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+    }
+    with open(out_path, "w") as f:
+        json.dump(result, f, indent=1)
+    if keep_hlo:
+        with open(os.path.join(results_dir, cid + ".hlo.txt"), "w") as f:
+            f.write(hlo)
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None,
+                    choices=[s.name for s in SHAPES] + [None])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multipod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--keep-hlo", action="store_true")
+    ap.add_argument("--results", default=RESULTS)
+    args = ap.parse_args()
+
+    archs = ASSIGNED if (args.all or args.arch is None) else [args.arch]
+    shapes = ([s.name for s in SHAPES] if (args.all or args.shape is None)
+              else [args.shape])
+    meshes = [False, True] if args.both_meshes else [args.multipod]
+
+    failures = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                cid = cell_id(arch, shape, mp)
+                try:
+                    r = run_cell(arch, shape, mp, args.results, args.force,
+                                 args.keep_hlo)
+                    roof = r["roofline"]
+                    print(f"{cid:55s} ok  dom={roof['dominant']:10s} "
+                          f"bound={max(roof['compute_s'], roof['memory_s'], roof['collective_s']):.4f}s "
+                          f"mem/dev={r['memory']['peak_bytes_per_device']/1e9:.2f}GB "
+                          f"compile={r.get('compile_s', 0)}s", flush=True)
+                except Exception as e:
+                    failures.append((cid, repr(e)))
+                    print(f"{cid:55s} FAIL {e!r}", flush=True)
+                    traceback.print_exc()
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for cid, err in failures:
+            print(f"  {cid}: {err}")
+        raise SystemExit(1)
+    print("\nall cells passed")
+
+
+if __name__ == "__main__":
+    main()

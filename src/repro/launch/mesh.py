@@ -1,0 +1,33 @@
+"""Production meshes.
+
+Single pod: 16 x 16 = 256 chips (``data`` x ``model``).
+Multi-pod:  2 x 16 x 16 = 512 chips (``pod`` x ``data`` x ``model``) — the
+``pod`` axis carries only data parallelism (gradient all-reduce crosses the
+DCN/ICI pod boundary; everything bandwidth-hungry stays intra-pod).
+
+Functions, not module constants: importing this module must never touch jax
+device state (smoke tests run on 1 CPU device; only dryrun.py forces 512).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(data: int = 1, model: int = 1):
+    """Small mesh over whatever devices exist (tests, examples)."""
+    return jax.make_mesh(
+        (data, model), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+# TPU v5e hardware constants (roofline denominators; see EXPERIMENTS.md).
+PEAK_FLOPS_BF16 = 197e12     # per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link

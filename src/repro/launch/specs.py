@@ -1,0 +1,297 @@
+"""Input specs and step functions per (arch x shape) dry-run cell.
+
+``input_specs(cfg, shape)`` returns ShapeDtypeStruct stand-ins for every
+model input (weak-type-correct, shardable, no device allocation) and
+``build_step(cfg, shape)`` returns the function the cell lowers:
+
+  train_4k     -> train_step  (loss + grads + AdamW update)
+  prefill_32k  -> forward     (full-sequence logits)
+  decode_*     -> serve_step  (one token against a seq_len KV cache)
+
+Sharding rules per cell live here too (``cell_rules``): long-context cells
+turn on sequence parallelism over the ``data`` axis; MoE cells shard expert
+capacity over DP; GQA KV-head axes fall back to replication when the head
+count doesn't divide the model axis.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import os
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeCell
+from repro.dist import sharding as shlib
+from repro.models.model import Model, build_model
+from repro.optim import adamw
+from repro.train.trainer import TrainConfig, make_train_step
+
+
+# ------------------------------ rules ---------------------------------- #
+def cell_rules(cfg: ModelConfig, shape: ShapeCell, mesh) -> Dict[str, Any]:
+    rules = dict(shlib.DEFAULT_RULES)
+    axes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    dp = axes.get("pod", 1) * axes.get("data", 1)
+    tp = axes.get("model", 1)
+
+    if "pod" not in axes:
+        rules["batch"] = ("data",)
+    # Batch too small to use the whole DP product: drop to what divides.
+    if shape.global_batch % dp != 0:
+        if shape.global_batch % axes.get("data", 1) == 0:
+            rules["batch"] = ("data",)
+        else:
+            rules["batch"] = None
+    # Sequence parallelism for long-context cells (the SALO band makes the
+    # halo cheap — DESIGN.md §4). Applies to activation/cache seq axes.
+    if shape.seq_len >= 32768 and rules["batch"] in (None, ("data",)):
+        free = [] if rules["batch"] == ("data",) else ["data"]
+        if "pod" in axes and rules["batch"] is None:
+            free = ["pod"] + free
+        rules["seq"] = tuple(free) if free else None
+    # KV heads: replicate when they don't divide the model axis.
+    if cfg.n_kv_heads % tp != 0:
+        rules["kv_heads"] = None
+    if cfg.n_heads % tp != 0:
+        rules["heads"] = None
+    # MoE: EP over `model` only (the default "experts" rule) unless the
+    # refuted expert-stationary A/B variant is requested.
+    if cfg.moe is not None:
+        if os.environ.get("REPRO_MOE_STATIONARY") == "1":
+            ep_axes = tuple(a for a in ("model", "data", "pod") if a in axes)
+            rules["experts"] = ep_axes
+        rules["expert_cap"] = None
+    if cfg.vocab_size % tp != 0:
+        rules["vocab"] = None
+    return rules
+
+
+# --------------------------- input specs -------------------------------- #
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeCell) -> Dict[str, Any]:
+    """ShapeDtypeStructs for the data batch of a train/prefill cell."""
+    B, S = shape.global_batch, shape.seq_len
+    specs = {"tokens": _sds((B, S), jnp.int32)}
+    if shape.kind == "train":
+        specs["labels"] = _sds((B, S), jnp.int32)
+    if cfg.encoder_decoder:
+        specs["audio_embeds"] = _sds((B, cfg.n_audio_frames, cfg.d_model),
+                                     jnp.bfloat16)
+    if cfg.n_vision_tokens:
+        specs["vision_embeds"] = _sds((B, S, cfg.d_model), jnp.bfloat16)
+        specs["vision_mask"] = _sds((B, S), jnp.bool_)
+        specs["positions"] = _sds((3, B, S), jnp.int32)
+    return specs
+
+
+def decode_specs(cfg: ModelConfig, shape: ShapeCell,
+                 model: Model) -> Tuple[Dict, Any]:
+    """(batch_t specs, cache specs) for a decode cell: one new token with a
+    KV cache of seq_len (the assignment's serve_step definition)."""
+    B, S = shape.global_batch, shape.seq_len
+    batch_t = {"tokens": _sds((B, 1), jnp.int32)}
+    if cfg.encoder_decoder:
+        batch_t["audio_embeds"] = _sds((B, cfg.n_audio_frames, cfg.d_model),
+                                       jnp.bfloat16)
+    if cfg.n_vision_tokens:
+        batch_t["vision_embeds"] = _sds((B, 1, cfg.d_model), jnp.bfloat16)
+        batch_t["vision_mask"] = _sds((B, 1), jnp.bool_)
+        batch_t["positions"] = _sds((3, B, 1), jnp.int32)
+    cache = jax.eval_shape(lambda: model.init_cache(B, S))
+    return batch_t, cache
+
+
+# ----------------------- sharding for the specs ------------------------- #
+def _logical_for_batch_key(key: str):
+    return {
+        "tokens": ("batch", "seq"),
+        "labels": ("batch", "seq"),
+        "audio_embeds": ("batch", None, "embed"),
+        "vision_embeds": ("batch", "seq", "embed"),
+        "vision_mask": ("batch", "seq"),
+        "positions": (None, "batch", "seq"),
+    }[key]
+
+
+def batch_shardings(specs, mesh, rules):
+    out = {}
+    for k in specs:
+        logical = _logical_for_batch_key(k)
+        out[k] = _divisible(mesh, rules, logical, specs[k].shape)
+    return out
+
+
+def _axes_product(mesh, spec_entry) -> int:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    axes = (spec_entry if isinstance(spec_entry, tuple)
+            else (spec_entry,) if spec_entry else ())
+    p = 1
+    for a in axes:
+        p *= sizes.get(a, 1)
+    return p
+
+
+def _divisible(mesh, rules, logical, shape):
+    """input_sharding, but drop any axis that doesn't divide its dim —
+    pjit *argument* shardings (unlike constraints) require divisibility."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    with shlib.axis_rules(rules):
+        spec = shlib.resolve(*logical)
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    clean = [e if dim % max(_axes_product(mesh, e), 1) == 0 else None
+             for e, dim in zip(entries, shape)]
+    return NamedSharding(mesh, P(*clean))
+
+
+def cache_shardings(cache_specs, mesh, rules, decode_seq_axis=None):
+    """Caches: (layers, batch, slots/seq, heads..., ...) — batch over DP,
+    KV seq per the cell rules (SP for long contexts). ``decode_seq_axis``
+    overrides the seq rule for 5-D attention caches (e.g. shard the cache
+    sequence over `model` when kv_heads doesn't divide the TP axis)."""
+    r = dict(rules)
+    if decode_seq_axis is not None:
+        r["cache_seq"] = decode_seq_axis
+    else:
+        r["cache_seq"] = rules.get("seq")
+
+    def one(path, leaf):
+        nd = len(leaf.shape)
+        # (L, B, S, Hkv, hd) attention caches; (L, B, *state) others.
+        if nd == 5:
+            logical = (None, "batch", "cache_seq", "kv_heads", None)
+        elif nd == 4:
+            logical = (None, "batch", None, None)
+        elif nd == 3:
+            logical = (None, "batch", None)
+        else:
+            logical = (None,) * nd
+        return _divisible(mesh, r, logical, leaf.shape)
+    return jax.tree_util.tree_map_with_path(one, cache_specs)
+
+
+# --------------------------- step builders ------------------------------- #
+def build_cell(arch_cfg: ModelConfig, shape: ShapeCell, mesh,
+               train_cfg: TrainConfig | None = None):
+    """Returns (fn, example_args_specs, in_shardings, out_shardings, rules).
+
+    ``fn`` is what gets lowered; everything is abstract (no allocation).
+    """
+    # A/B experiment knobs (EXPERIMENTS.md §Perf) — env so a dry-run cell
+    # can be re-lowered with one factor changed and nothing else.
+    salo_over = {}
+    if os.environ.get("REPRO_DECODE_SLICE"):
+        salo_over["decode_slice"] = os.environ["REPRO_DECODE_SLICE"] == "1"
+    if os.environ.get("REPRO_RING_CACHE"):
+        salo_over["ring_cache"] = os.environ["REPRO_RING_CACHE"] == "1"
+    if os.environ.get("REPRO_BLOCK_Q"):
+        salo_over["block_q"] = int(os.environ["REPRO_BLOCK_Q"])
+    if os.environ.get("REPRO_BLOCK_K"):
+        salo_over["block_k"] = int(os.environ["REPRO_BLOCK_K"])
+    if salo_over:
+        arch_cfg = dataclasses.replace(
+            arch_cfg, salo=dataclasses.replace(arch_cfg.salo, **salo_over))
+    model = build_model(arch_cfg)
+    rules = cell_rules(arch_cfg, shape, mesh)
+    pspec_fn = functools.partial(shlib.param_shardings, mesh=mesh,
+                                 rules=rules)
+
+    params_specs = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    params_sh = pspec_fn(params_specs)
+
+    if shape.kind == "train":
+        if train_cfg is None:
+            # Baseline defaults that must hold at scale: bf16 optimizer
+            # moments for >=10B-param models (fp32 m/v alone would blow
+            # 16 GB/chip), microbatching to bound activation memory at
+            # ~16k tokens per device per microbatch.
+            axes = dict(zip(mesh.axis_names, mesh.devices.shape))
+            dp = axes.get("pod", 1) * axes.get("data", 1)
+            tok_per_dev = shape.global_batch * shape.seq_len // max(dp, 1)
+            mb = 1
+            while (tok_per_dev // mb > 16384 and mb < 16
+                   and shape.global_batch % (mb * 2) == 0):
+                mb *= 2
+            if os.environ.get("REPRO_MICROBATCHES"):
+                mb = int(os.environ["REPRO_MICROBATCHES"])
+            moment_dtype = ("bfloat16" if arch_cfg.n_params() > 10e9
+                            else "float32")
+            train_cfg = TrainConfig(
+                optimizer=adamw.AdamWConfig(moment_dtype=moment_dtype),
+                microbatches=mb)
+        tcfg = train_cfg
+        step = make_train_step(model, tcfg)
+        opt_specs = jax.eval_shape(
+            functools.partial(adamw.init, tcfg.optimizer), params_specs)
+        opt_sh = adamw.AdamWState(
+            step=shlib.input_sharding(mesh, rules),
+            m=pspec_fn(opt_specs.m), v=pspec_fn(opt_specs.v),
+            master=None if opt_specs.master is None
+            else pspec_fn(opt_specs.master))
+        bspecs = batch_specs(arch_cfg, shape)
+        bsh = batch_shardings(bspecs, mesh, rules)
+
+        def fn(params, opt_state, batch):
+            with shlib.axis_rules(rules):
+                return step(params, opt_state, batch)
+
+        args = (params_specs, opt_specs, bspecs)
+        in_sh = (params_sh, opt_sh, bsh)
+        out_sh = (params_sh, opt_sh, None)
+        fn.donate_argnums = (0, 1)   # params/opt updated in place
+        return fn, args, in_sh, out_sh, rules
+
+    if shape.kind == "prefill":
+        bspecs = batch_specs(arch_cfg, shape)
+        bsh = batch_shardings(bspecs, mesh, rules)
+
+        def fn(params, batch):
+            with shlib.axis_rules(rules):
+                return model.forward(params, batch)
+
+        fn.donate_argnums = ()
+        return fn, (params_specs, bspecs), (params_sh, bsh), None, rules
+
+    # decode
+    bt_specs, cache_specs = decode_specs(arch_cfg, shape, model)
+
+    def _decode_logical(key):
+        # one-token inputs: never shard the (length-1) seq axis
+        logical = list(_logical_for_batch_key(key))
+        for i, name in enumerate(logical):
+            if name == "seq":
+                logical[i] = None
+        return tuple(logical)
+
+    bt_sh = {k: shlib.input_sharding(mesh, rules, *_decode_logical(k))
+             for k in bt_specs}
+    # If KV heads don't divide the TP axis, put the model axis on the cache
+    # sequence instead: TP ranks each hold a slice of the context and the
+    # softmax merges across them (the paper's Eq. 2 at TP scale).
+    axes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    tp = axes.get("model", 1)
+    decode_seq_axis = None
+    if arch_cfg.n_kv_heads % tp != 0:
+        existing = rules.get("seq") or ()
+        existing = existing if isinstance(existing, tuple) else (existing,)
+        decode_seq_axis = tuple(existing) + ("model",)
+    cache_sh = cache_shardings(cache_specs, mesh, rules,
+                               decode_seq_axis=decode_seq_axis)
+    t_spec = _sds((), jnp.int32)
+    t_sh = shlib.input_sharding(mesh, rules)
+
+    def fn(params, cache, batch_t, t):
+        with shlib.axis_rules(rules):
+            return model.decode_step(params, cache, batch_t, t)
+
+    args = (params_specs, cache_specs, bt_specs, t_spec)
+    in_sh = (params_sh, cache_sh, bt_sh, t_sh)
+    out_sh = (None, cache_sh)
+    fn.donate_argnums = (1,)         # KV cache updated in place
+    return fn, args, in_sh, out_sh, rules

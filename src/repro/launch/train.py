@@ -1,0 +1,116 @@
+"""End-to-end training driver.
+
+  PYTHONPATH=src python -m repro.launch.train --arch smollm-135m \\
+      --steps 300 --seq 512 --batch 8 [--smoke] [--ckpt DIR] [--resume]
+
+Runs on whatever devices exist (`--data/--model` mesh dims), with the full
+production stack: SALO attention, sharding rules, grad clip + schedule,
+checkpoint manager (atomic/keep-k/async), straggler watchdog, restart-safe
+data stream.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, get_smoke
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.dist import sharding as shlib
+from repro.ft.checkpoint import CheckpointManager
+from repro.ft.manager import StragglerWatchdog
+from repro.launch.mesh import make_host_mesh
+from repro.models.model import build_model
+from repro.optim import adamw
+from repro.optim.schedule import Schedule
+from repro.train.trainer import TrainConfig, make_train_step
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-135m")
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced same-family config")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--seq", type=int, default=512)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--data", type=int, default=1)
+    ap.add_argument("--model", type=int, default=1)
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=100)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--data-branch", type=int, default=16)
+    ap.add_argument("--data-docs", type=int, default=64)
+    args = ap.parse_args(argv)
+
+    cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
+    model = build_model(cfg)
+    mesh = make_host_mesh(args.data, args.model)
+    rules = dict(shlib.DEFAULT_RULES, batch=("data",), fsdp=None)
+
+    tcfg = TrainConfig(
+        optimizer=adamw.AdamWConfig(lr=args.lr),
+        schedule=Schedule(warmup_steps=max(10, args.steps // 20),
+                          total_steps=args.steps),
+        microbatches=args.microbatches)
+
+    params = model.init(jax.random.PRNGKey(args.seed))
+    opt = adamw.init(tcfg.optimizer, params)
+    n_par = sum(x.size for x in jax.tree.leaves(params))
+    print(f"# arch={cfg.name} params={n_par/1e6:.1f}M "
+          f"mesh={dict(zip(mesh.axis_names, mesh.devices.shape))} "
+          f"window={cfg.salo.window} sinks={cfg.salo.n_global}")
+
+    mgr = CheckpointManager(args.ckpt, keep=3) if args.ckpt else None
+    start = 0
+    if mgr and args.resume:
+        restored, step0 = mgr.restore_latest({"params": params, "opt": opt})
+        if restored is not None:
+            params, opt = restored["params"], restored["opt"]
+            start = step0
+            print(f"# resumed from step {start}")
+
+    raw_step = make_train_step(model, tcfg)
+
+    def fn(p, o, b):
+        with shlib.axis_rules(rules, mesh):
+            return raw_step(p, o, b)
+
+    step = jax.jit(fn, donate_argnums=(0, 1))
+    ds = SyntheticLM(cfg, DataConfig(args.seq, args.batch, seed=args.seed,
+                                     branch=args.data_branch,
+                                     n_docs=args.data_docs))
+    wd = StragglerWatchdog()
+
+    with mesh:
+        for i in range(start, args.steps):
+            t0 = time.perf_counter()
+            batch = {k: jnp.asarray(v) for k, v in ds.batch(i).items()}
+            params, opt, metrics = step(params, opt, batch)
+            loss = float(metrics["loss"])
+            dt = time.perf_counter() - t0
+            straggler = wd.observe(dt)
+            if i % args.log_every == 0 or i == args.steps - 1:
+                toks = args.batch * args.seq / dt
+                print(f"step {i:5d} loss {loss:8.4f} "
+                      f"gnorm {float(metrics['grad_norm']):7.3f} "
+                      f"{dt*1e3:7.1f} ms {toks/1e3:7.1f} ktok/s"
+                      + (" [straggler]" if straggler else ""), flush=True)
+            if mgr and (i + 1) % args.ckpt_every == 0:
+                mgr.save({"params": params, "opt": opt}, i + 1)
+    if mgr:
+        mgr.save({"params": params, "opt": opt}, args.steps)
+        mgr.wait()
+    print(f"# done: final loss {loss:.4f}, straggler events {wd.events}")
+    return loss
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,156 @@
+"""Unified model API: ``build_model(cfg) -> Model``.
+
+Every architecture exposes the same surface:
+  * ``init(rng) -> params``
+  * ``forward(params, batch) -> logits``          (train / prefill)
+  * ``loss(params, batch) -> (loss, metrics)``
+  * ``init_cache(batch_size, max_len) -> cache``  (decode shapes)
+  * ``decode_step(params, cache, batch_t, t) -> (logits, cache)``
+
+``batch`` is a dict; which keys exist per family is defined by
+``launch.specs.input_specs`` (the dry-run and the data pipeline agree on it).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.dist.sharding import constrain
+from repro.models import layers as L
+from repro.models import transformer as T
+
+
+class Model:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.program = T.make_program(cfg)
+
+    # ------------------------------ init ------------------------------- #
+    def init(self, rng) -> Dict[str, Any]:
+        cfg = self.cfg
+        ks = jax.random.split(rng, 8)
+        params = {"embed": L.embed_init(ks[0], cfg),
+                  "ln_f": L.rmsnorm_init(cfg.d_model)}
+        if not cfg.tie_embeddings:
+            params["lm_head"] = {"w": L.embed_init(ks[1], cfg)["w"]}
+        for i, (kind, n) in enumerate(self.program):
+            params[f"seg{i}_{kind}"] = T.segment_init(ks[2 + i], cfg, kind, n)
+        if cfg.encoder_decoder:
+            params["enc"] = {
+                "seg0_attn_mlp": T.segment_init(ks[6], cfg, "attn_mlp",
+                                                cfg.n_layers),
+                "ln_f": L.rmsnorm_init(cfg.d_model)}
+        if cfg.n_vision_tokens:
+            params["vision_proj"] = {
+                "w": L.dense_init(ks[7], cfg.d_model, cfg.d_model,
+                                  L.dt(cfg))}
+        return params
+
+    # ----------------------------- forward ----------------------------- #
+    def _embed_inputs(self, params, batch):
+        cfg = self.cfg
+        x = L.embed_apply(params["embed"], batch["tokens"], cfg)
+        if cfg.n_vision_tokens and "vision_embeds" in batch:
+            vis = batch["vision_embeds"].astype(x.dtype)
+            vis = vis @ params["vision_proj"]["w"].astype(x.dtype)
+            x = jnp.where(batch["vision_mask"][..., None], vis, x)
+        return x
+
+    def _encode(self, params, batch):
+        """Whisper encoder over stub audio-frame embeddings."""
+        cfg = self.cfg
+        import dataclasses
+        enc_salo = dataclasses.replace(cfg.salo, bidirectional=True)
+        pattern = L.salo_pattern(cfg, causal=False, salo=enc_salo)
+        x = batch["audio_embeds"].astype(L.dt(cfg, "compute"))
+        x = x + L.sinusoidal_pos(x.shape[1], cfg.d_model, x.dtype)
+        x, _ = T.segment_apply(params["enc"]["seg0_attn_mlp"], x, cfg,
+                               "attn_mlp", pattern)
+        return L.rmsnorm(params["enc"]["ln_f"], x, cfg.norm_eps)
+
+    def forward(self, params, batch, return_aux: bool = False):
+        cfg = self.cfg
+        x = self._embed_inputs(params, batch)
+        x = constrain(x, "batch", "seq", "embed")
+        positions = batch.get("positions", None)
+        mrope = cfg.mrope_sections
+        if mrope is not None and positions is None:
+            B, S = batch["tokens"].shape
+            positions = jnp.broadcast_to(jnp.arange(S), (3, B, S))
+        enc_out = self._encode(params, batch) if cfg.encoder_decoder else None
+        pats = T._patterns(cfg)
+        aux_total: Dict[str, jax.Array] = {}
+        for i, (kind, n) in enumerate(self.program):
+            pattern = pats.get(kind, pats["attn_mlp"])
+            x, aux = T.segment_apply(
+                params[f"seg{i}_{kind}"], x, cfg, kind, pattern,
+                positions=positions, mrope=mrope, enc_out=enc_out)
+            for k_, v_ in aux.items():
+                aux_total[k_] = aux_total.get(k_, 0.0) + v_
+        x = L.rmsnorm(params["ln_f"], x, cfg.norm_eps)
+        logits = L.logits_apply(params["embed"], params.get("lm_head"),
+                                x, cfg)
+        logits = constrain(logits, "batch", "seq", "vocab")
+        if return_aux:
+            return logits, aux_total
+        return logits
+
+    # ------------------------------ loss -------------------------------- #
+    def loss(self, params, batch):
+        logits, aux = self.forward(params, batch, return_aux=True)
+        nll = L.cross_entropy(logits, batch["labels"], batch.get("mask"))
+        loss = nll
+        metrics = {"nll": nll}
+        for k_, v_ in aux.items():
+            if k_ in ("load_balance", "router_z"):
+                loss = loss + v_
+            metrics[k_] = v_
+        metrics["loss"] = loss
+        return loss, metrics
+
+    # ------------------------------ decode ------------------------------ #
+    def init_cache(self, batch_size: int, max_len: int):
+        cfg = self.cfg
+        dtype = L.dt(cfg, "compute")
+        cache = {}
+        for i, (kind, n) in enumerate(self.program):
+            one = T.block_cache_init(cfg, kind, batch_size, max_len, dtype)
+            cache[f"seg{i}_{kind}"] = jax.tree.map(
+                lambda a: jnp.broadcast_to(a[None], (n, *a.shape)), one)
+        return cache
+
+    def decode_step(self, params, cache, batch_t, t):
+        """batch_t: {'tokens': (B, 1), ...}; t: scalar position index."""
+        cfg = self.cfg
+        x = self._embed_inputs(params, batch_t)
+        mrope = cfg.mrope_sections
+        positions = batch_t.get("positions", None)
+        pats = T._patterns(cfg)
+        new_cache = {}
+        for i, (kind, n) in enumerate(self.program):
+            key = f"seg{i}_{kind}"
+            pattern = pats.get(kind, pats["attn_mlp"])
+            x, new_cache[key] = T.segment_decode(
+                params[key], cache[key], x, t, cfg, kind, pattern,
+                positions=positions, mrope=mrope)
+        x = L.rmsnorm(params["ln_f"], x, cfg.norm_eps)
+        logits = L.logits_apply(params["embed"], params.get("lm_head"),
+                                x, cfg)
+        return logits, new_cache
+
+    # ------------------------------ prefill ------------------------------ #
+    def prefill(self, params, batch):
+        """Run the full-sequence path and build a decode-ready cache.
+
+        Returns (logits, cache). Implemented by re-projecting K/V per layer
+        — same math the train path uses, so it reuses the SALO engines.
+        """
+        raise NotImplementedError(
+            "prefill-to-cache is exercised via serve.engine")
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    return Model(cfg)

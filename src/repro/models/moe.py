@@ -1,0 +1,155 @@
+"""Mixture-of-Experts FFN with expert-parallel capacity dispatch.
+
+Sort-based dispatch (Megablocks-style, dropless up to the capacity factor):
+tokens are argsorted by assigned expert, placed into a ``(E, C, d)`` buffer
+sharded over the ``model`` mesh axis (EP) with capacity sharded over DP axes
+— pjit lowers the scatter/gather into the all-to-all-equivalent collectives a
+real MoE pipeline performs.
+
+Supports the two assigned MoE architectures:
+  * arctic-480b: 128 experts top-2 **+ dense residual** (dense FFN in
+    parallel with the MoE output),
+  * kimi-k2:     384 experts top-8, shared expert, leading dense layer(s).
+
+Aux losses: Switch load-balance + router z-loss.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.dist.sharding import constrain
+from repro.models.layers import dense_init, dt, mlp_init, mlp_apply
+
+
+def moe_init(rng, cfg: ModelConfig):
+    m = cfg.moe
+    d, f, E = cfg.d_model, m.d_ff_expert, m.n_experts
+    ks = jax.random.split(rng, 5)
+
+    def experts(key, din, dout):
+        sub = jax.random.split(key, E)
+        return jnp.stack([dense_init(k, din, dout, dt(cfg)) for k in sub])
+
+    p = {"router": dense_init(ks[0], d, E, jnp.float32),
+         "w_in": experts(ks[1], d, f),
+         "w_out": experts(ks[2], f, d)}
+    if cfg.act in ("swiglu", "geglu"):
+        p["w_gate"] = experts(ks[3], d, f)
+    if m.n_shared_experts:
+        p["shared"] = mlp_init(ks[4], cfg, d_ff=f * m.n_shared_experts)
+    return p
+
+
+def _expert_ffn(p, buf, cfg: ModelConfig):
+    """buf: (E, C, d) -> (E, C, d), per-expert SwiGLU/GeGLU/GELU."""
+    w_in = p["w_in"].astype(buf.dtype)
+    h = jnp.einsum("ecd,edf->ecf", buf, w_in)
+    if cfg.act in ("swiglu", "geglu"):
+        g = jnp.einsum("ecd,edf->ecf", buf, p["w_gate"].astype(buf.dtype))
+        act = jax.nn.silu if cfg.act == "swiglu" else jax.nn.gelu
+        h = act(g) * h
+    else:
+        h = jax.nn.gelu(h)
+    h = constrain(h, "experts", "expert_cap", None)
+    return jnp.einsum("ecf,efd->ecd", h, p["w_out"].astype(buf.dtype))
+
+
+def _dispatch_group(xt, probs, E, k, C, dtype):
+    """Sort-dispatch ONE token group (vmapped over groups; everything here
+    is group-local, so under a G->data sharding no collective is needed for
+    the sort/scatter). xt: (Tg, d); probs: (Tg, E).
+    Returns (buf (E,C,d), combine metadata)."""
+    Tg = xt.shape[0]
+    gates, expert_idx = jax.lax.top_k(probs, k)            # (Tg, k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+    flat_e = expert_idx.reshape(-1)                        # (Tg*k,)
+    order = jnp.argsort(flat_e)
+    sorted_e = flat_e[order]
+    starts = jnp.searchsorted(sorted_e, jnp.arange(E))
+    pos = jnp.arange(Tg * k) - starts[sorted_e]
+    keep = pos < C
+    pos_c = jnp.clip(pos, 0, C - 1)
+    tok = order // k
+    vals = xt[tok] * keep[:, None].astype(dtype)
+    buf = jnp.zeros((E, C, xt.shape[1]), dtype)
+    buf = buf.at[sorted_e, pos_c].add(vals)
+    return buf, (gates, sorted_e, pos_c, keep, order)
+
+
+def _combine_group(out_buf, meta, T_g, k, dtype):
+    gates, sorted_e, pos_c, keep, order = meta
+    gathered = out_buf[sorted_e, pos_c] * keep[:, None].astype(dtype)
+    contrib = jnp.zeros((T_g * k, out_buf.shape[-1]), dtype)
+    contrib = contrib.at[order].set(gathered).reshape(T_g, k, -1)
+    return jnp.einsum("tkd,tk->td", contrib, gates.astype(dtype))
+
+
+def moe_apply(p, x, cfg: ModelConfig):
+    """x: (B, S, d) -> (y, aux_losses dict).
+
+    Group-local dispatch (EXPERIMENTS.md §Perf kimi-k2): tokens are split
+    into ``dispatch_groups`` groups aligned with the DP sharding; routing,
+    sort and capacity are PER GROUP (vmapped — no global argsort, no
+    cross-shard scatter). The only cross-device movement left is the
+    (G, E, C, d) -> expert-sharded transpose, the real MoE all-to-all.
+    """
+    m = cfg.moe
+    B, S, d = x.shape
+    E, k = m.n_experts, m.top_k
+    T = B * S
+    xt = constrain(x.reshape(T, d), "batch", None)
+
+    # --- routing (f32) -------------------------------------------------- #
+    logits = xt.astype(jnp.float32) @ p["router"]          # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+
+    # --- group-local dispatch ------------------------------------------- #
+    # REPRO_MOE_GROUPS=1 reproduces the global-sort baseline (A/B runs).
+    G = int(os.environ.get("REPRO_MOE_GROUPS", m.dispatch_groups))
+    while G > 1 and T % G:
+        G //= 2
+    Tg = T // G
+    C = int(Tg * k / E * m.capacity_factor)
+    C = max(8, -(-C // 8) * 8)
+
+    xg = constrain(xt.reshape(G, Tg, d), "batch", None, None)
+    pg = constrain(probs.reshape(G, Tg, E), "batch", None, None)
+    buf, meta = jax.vmap(
+        lambda a, b: _dispatch_group(a, b, E, k, C, xt.dtype))(xg, pg)
+    # Two-hop reshard to the expert-sharded layout. Hop 1 is collective-free
+    # (G->data and E->model live on DIFFERENT mesh axes); hop 2 moves ONLY
+    # the `data` axis from the G dim to the E dim — a single-axis dim-to-dim
+    # move that GSPMD lowers as a true all-to-all instead of the
+    # all-gather+slice it emits for the one-shot reshard (§Perf kimi-k2).
+    buf = constrain(buf, "batch", "experts_tp", None, None)   # hop 1: free
+    buf = constrain(buf, None, "experts", None, None)         # hop 2: A2A
+
+    out_buf = jax.vmap(lambda b_: _expert_ffn(p, b_, cfg))(buf)
+    out_buf = constrain(out_buf, None, "experts", None, None)
+    out_buf = constrain(out_buf, "batch", "experts_tp", None, None)  # A2A
+
+    # --- combine (group-local gather again) ------------------------------ #
+    y = jax.vmap(lambda ob, me: _combine_group(ob, me, Tg, k, xt.dtype))(
+        constrain(out_buf, "batch", None, None, None), meta)
+    y = constrain(y.reshape(T, d), "batch", None)
+
+    # --- aux losses ------------------------------------------------------ #
+    # Switch load balance: E * sum_e (fraction routed to e) * (mean prob e).
+    top1 = jnp.argmax(probs, axis=-1)
+    frac = jnp.zeros(E, jnp.float32).at[top1].add(1.0) / T
+    mean_p = probs.mean(0)
+    lb = E * jnp.sum(frac * mean_p)
+    z = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+    keep_frac = meta[3].astype(jnp.float32).mean()
+    aux = {"load_balance": m.load_balance_coef * lb,
+           "router_z": m.router_z_coef * z,
+           "dropped_frac": 1.0 - keep_frac}
+
+    y = y.reshape(B, S, d)
+    if m.n_shared_experts:
+        y = y + mlp_apply(p["shared"], x, cfg)
+    return y, aux

@@ -1,0 +1,169 @@
+"""Mamba2 SSD (state-space duality) block — chunked, MXU-friendly.
+
+Implements the SSD chunked algorithm (arXiv:2405.21060 §6): intra-chunk
+quadratic term (batched matmuls — maps to the MXU) + inter-chunk linear
+recurrence over per-chunk states (lax.scan). Attention-free: the paper's
+sparse-attention technique is inapplicable here (DESIGN.md §5); this arch
+exists to prove the framework hosts non-attention families.
+
+Decode carries (conv_state, ssd_state) and costs O(1) per token.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.dist.sharding import constrain
+from repro.models.layers import dense_init, dt
+
+
+def _dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    H = d_inner // s.head_dim
+    return d_inner, H, s.d_state, s.head_dim
+
+
+def ssm_init(rng, cfg: ModelConfig):
+    s = cfg.ssm
+    d = cfg.d_model
+    d_inner, H, N, P = _dims(cfg)
+    conv_ch = d_inner + 2 * N  # x, B, C share the causal conv (G=1 group)
+    ks = jax.random.split(rng, 4)
+    return {
+        "w_in": dense_init(ks[0], d, 2 * d_inner + 2 * N + H, dt(cfg)),
+        "w_out": dense_init(ks[1], d_inner, d, dt(cfg)),
+        "conv_w": (jax.random.normal(ks[2], (s.conv_width, conv_ch))
+                   * 0.1).astype(dt(cfg)),
+        "A_log": jnp.zeros((H,), jnp.float32),       # A = -exp(A_log) = -1
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "norm_scale": jnp.zeros((d_inner,), jnp.float32),
+    }
+
+
+def _split(cfg, h):
+    d_inner, H, N, P = _dims(cfg)
+    z, xbc, dt_raw = jnp.split(h, [d_inner, 2 * d_inner + 2 * N], axis=-1)
+    return z, xbc, dt_raw
+
+
+def _causal_conv(xbc, w, state=None, act=jax.nn.silu):
+    """Depthwise causal conv. xbc: (B, T, C); w: (W, C).
+
+    state: (B, W-1, C) trailing context for decode; returns (y, new_state).
+    """
+    W = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((xbc.shape[0], W - 1, xbc.shape[2]), xbc.dtype)
+    else:
+        pad = state
+    xp = jnp.concatenate([pad, xbc], axis=1)
+    y = sum(xp[:, i : i + xbc.shape[1]] * w[i] for i in range(W))
+    if act is not None:
+        y = act(y)
+    return y, xp[:, -(W - 1) :]
+
+
+def _gated_norm(p, y, z, eps):
+    yf = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(yf * yf, axis=-1, keepdims=True)
+    return (yf * jax.lax.rsqrt(var + eps) * (1 + p["norm_scale"])).astype(y.dtype)
+
+
+def ssd_chunked(x, B_mat, C_mat, a, chunk: int):
+    """SSD scan. x: (B,T,H,P); B_mat/C_mat: (B,T,N); a: (B,T,H) log-decay<=0.
+    Returns y (B,T,H,P). Single B/C group broadcast over heads (G=1)."""
+    Bsz, T, H, P = x.shape
+    N = B_mat.shape[-1]
+    Q = chunk
+    assert T % Q == 0, (T, Q)
+    nc = T // Q
+
+    xc = x.reshape(Bsz, nc, Q, H, P)
+    Bc = B_mat.reshape(Bsz, nc, Q, N)
+    Cc = C_mat.reshape(Bsz, nc, Q, N)
+    ac = a.reshape(Bsz, nc, Q, H).astype(jnp.float32)
+    Acum = jnp.cumsum(ac, axis=2)                      # (B,nc,Q,H)
+
+    # Intra-chunk (quadratic within chunk — the MXU part).
+    scores = jnp.einsum("bcqn,bckn->bcqk", Cc.astype(jnp.float32),
+                        Bc.astype(jnp.float32))        # (B,nc,Q,Q)
+    L = Acum[:, :, :, None, :] - Acum[:, :, None, :, :]  # (B,nc,Q,Q,H)
+    iq = jnp.arange(Q)
+    causal = (iq[:, None] >= iq[None, :])[None, None, :, :, None]
+    L = jnp.where(causal, jnp.exp(L), 0.0)
+    M = scores[..., None] * L                          # (B,nc,Q,Q,H)
+    y_intra = jnp.einsum("bcqkh,bckhp->bcqhp", M, xc.astype(jnp.float32))
+
+    # Per-chunk output states.
+    decay_out = jnp.exp(Acum[:, :, -1:, :] - Acum)     # (B,nc,Q,H)
+    state_c = jnp.einsum("bcqn,bcqh,bcqhp->bchnp",
+                         Bc.astype(jnp.float32), decay_out,
+                         xc.astype(jnp.float32))       # (B,nc,H,N,P)
+
+    # Inter-chunk recurrence (linear scan over nc).
+    chunk_decay = jnp.exp(Acum[:, :, -1, :])           # (B,nc,H)
+
+    def step(s, inp):
+        dec, st = inp                                  # (B,H), (B,H,N,P)
+        s_new = s * dec[:, :, None, None] + st
+        return s_new, s                                # emit INPUT state
+
+    s0 = jnp.zeros((Bsz, H, N, P), jnp.float32)
+    _, s_in = jax.lax.scan(step, s0,
+                           (chunk_decay.transpose(1, 0, 2),
+                            state_c.transpose(1, 0, 2, 3, 4)))
+    s_in = s_in.transpose(1, 0, 2, 3, 4)               # (B,nc,H,N,P)
+
+    y_inter = jnp.einsum("bcqn,bcqh,bchnp->bcqhp",
+                         Cc.astype(jnp.float32), jnp.exp(Acum), s_in)
+    y = (y_intra + y_inter).reshape(Bsz, T, H, P)
+    return y
+
+
+def ssm_apply(p, x, cfg: ModelConfig):
+    """Train/prefill path. x: (B, T, d) -> (B, T, d)."""
+    s = cfg.ssm
+    d_inner, H, N, P = _dims(cfg)
+    B_, T, _ = x.shape
+    h = x @ p["w_in"].astype(x.dtype)
+    z, xbc, dt_raw = _split(cfg, h)
+    xbc, _ = _causal_conv(xbc, p["conv_w"].astype(x.dtype))
+    xi, Bm, Cm = jnp.split(xbc, [d_inner, d_inner + N], axis=-1)
+    delta = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])                           # (H,)
+    xh = xi.reshape(B_, T, H, P)
+    xdt = xh.astype(jnp.float32) * delta[..., None]
+    a = delta * A                                      # (B,T,H) log decay
+    y = ssd_chunked(xdt, Bm, Cm, a, s.chunk)
+    y = y + p["D"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(B_, T, d_inner)
+    y = _gated_norm(p, y, z, cfg.norm_eps).astype(x.dtype)
+    y = constrain(y, "batch", "seq", "ffn")
+    return y @ p["w_out"].astype(x.dtype)
+
+
+def ssm_decode(p, x_t, conv_state, ssd_state, cfg: ModelConfig):
+    """One-token step. x_t: (B,1,d); conv_state: (B,W-1,C);
+    ssd_state: (B,H,N,P) f32. Returns (y, conv_state, ssd_state)."""
+    d_inner, H, N, P = _dims(cfg)
+    B_ = x_t.shape[0]
+    h = x_t @ p["w_in"].astype(x_t.dtype)
+    z, xbc, dt_raw = _split(cfg, h)
+    xbc, conv_state = _causal_conv(xbc, p["conv_w"].astype(x_t.dtype),
+                                   state=conv_state)
+    xi, Bm, Cm = jnp.split(xbc, [d_inner, d_inner + N], axis=-1)
+    delta = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])[:, 0]
+    A = -jnp.exp(p["A_log"])
+    xh = xi.reshape(B_, 1, H, P)[:, 0].astype(jnp.float32)  # (B,H,P)
+    a = jnp.exp(delta * A)                                   # (B,H)
+    upd = jnp.einsum("bn,bh,bhp->bhnp", Bm[:, 0].astype(jnp.float32),
+                     delta, xh)
+    ssd_state = ssd_state * a[:, :, None, None] + upd
+    y = jnp.einsum("bn,bhnp->bhp", Cm[:, 0].astype(jnp.float32), ssd_state)
+    y = y + p["D"][None, :, None] * xh
+    y = y.reshape(B_, 1, d_inner)
+    y = _gated_norm(p, y, z, cfg.norm_eps).astype(x_t.dtype)
+    return y @ p["w_out"].astype(x_t.dtype), conv_state, ssd_state

@@ -1,0 +1,101 @@
+"""AdamW with dtype-configurable moments (built from scratch — no optax).
+
+At 480B/1T-parameter scale the optimizer state dominates HBM: fp32 m/v for a
+1T model is 8 TB. ``moment_dtype="bfloat16"`` halves it (recorded per-cell in
+EXPERIMENTS.md); state is sharded exactly like the parameters.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    moment_dtype: str = "float32"
+    # master fp32 copy of bf16 params (None = update in param dtype)
+    use_master: bool = False
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    m: Any
+    v: Any
+    master: Any  # fp32 params or None
+
+
+def init(cfg: AdamWConfig, params) -> AdamWState:
+    mdt = jnp.dtype(cfg.moment_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, mdt)
+    master = (jax.tree.map(lambda p: p.astype(jnp.float32), params)
+              if cfg.use_master else None)
+    return AdamWState(step=jnp.zeros((), jnp.int32),
+                      m=jax.tree.map(zeros, params),
+                      v=jax.tree.map(zeros, params),
+                      master=master)
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), norm
+
+
+def update(cfg: AdamWConfig, state: AdamWState, params, grads,
+           lr_scale: jax.Array | float = 1.0):
+    """One AdamW step. Returns (new_params, new_state, metrics)."""
+    grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+    if cfg.grad_clip > 0:
+        grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    else:
+        gnorm = global_norm(grads)
+
+    step = state.step + 1
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+    lr = cfg.lr * lr_scale
+
+    base = state.master if cfg.use_master else params
+
+    def upd(p, g, m, v):
+        mf = m.astype(jnp.float32) * cfg.b1 + g * (1 - cfg.b1)
+        vf = v.astype(jnp.float32) * cfg.b2 + g * g * (1 - cfg.b2)
+        mhat = mf / b1c
+        vhat = vf / b2c
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * \
+            p.astype(jnp.float32)
+        new_p = p.astype(jnp.float32) - lr * delta
+        return new_p, mf.astype(m.dtype), vf.astype(v.dtype)
+
+    out = jax.tree.map(upd, base, grads, state.m, state.v)
+    treedef = jax.tree.structure(base)
+    flat = jax.tree.leaves(out, is_leaf=lambda x: isinstance(x, tuple))
+    new_base = treedef.unflatten([t[0] for t in flat])
+    new_m = treedef.unflatten([t[1] for t in flat])
+    new_v = treedef.unflatten([t[2] for t in flat])
+
+    if cfg.use_master:
+        new_params = jax.tree.map(lambda nb, p: nb.astype(p.dtype),
+                                  new_base, params)
+        new_master = new_base
+    else:
+        new_params = jax.tree.map(lambda nb, p: nb.astype(p.dtype),
+                                  new_base, params)
+        new_master = None
+    new_state = AdamWState(step=step, m=new_m, v=new_v, master=new_master)
+    return new_params, new_state, {"grad_norm": gnorm,
+                                   "lr": jnp.asarray(lr, jnp.float32)}

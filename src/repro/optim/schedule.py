@@ -1,0 +1,30 @@
+"""LR schedules: linear warmup + {cosine, rsqrt, constant} decay."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Schedule:
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    kind: str = "cosine"       # cosine | rsqrt | constant
+    min_ratio: float = 0.1
+
+    def __call__(self, step):
+        s = jnp.asarray(step, jnp.float32)
+        warm = jnp.minimum(s / jnp.maximum(self.warmup_steps, 1), 1.0)
+        if self.kind == "constant":
+            decay = 1.0
+        elif self.kind == "rsqrt":
+            decay = jnp.sqrt(jnp.maximum(self.warmup_steps, 1) /
+                             jnp.maximum(s, self.warmup_steps))
+        else:  # cosine
+            frac = jnp.clip((s - self.warmup_steps) /
+                            max(self.total_steps - self.warmup_steps, 1),
+                            0.0, 1.0)
+            decay = self.min_ratio + (1 - self.min_ratio) * 0.5 * (
+                1 + jnp.cos(jnp.pi * frac))
+        return warm * decay

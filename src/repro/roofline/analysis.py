@@ -1,0 +1,218 @@
+"""Roofline analysis from compiled dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Three terms per (arch x shape x mesh) cell, all in seconds:
+
+  compute    = HLO_FLOPs_per_device / peak_FLOP/s
+  memory     = HLO_bytes_per_device / HBM_bw
+  collective = sum over collective ops of ring-model time over ICI links
+
+``cost_analysis()`` is per-device (post-SPMD partitioning — verified).
+Collective bytes are NOT in cost_analysis: we parse the compiled HLO text and
+apply standard ring formulas (S = per-device payload bytes, p = group size):
+
+  all-reduce       2 * S * (p-1)/p        (reduce-scatter + all-gather ring)
+  all-gather       S * (p-1)/p            (S = gathered output size)
+  reduce-scatter   S_in * (p-1)/p         (we see the op output; S_in = S*p)
+  all-to-all       S * (p-1)/p
+  collective-permute  S
+
+One ICI link per collective is assumed (conservative: v5e has 4 per chip and
+bidirectional rings; real overlap makes this an upper bound on the term).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Tuple
+
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _group_size(line: str, world: int) -> int:
+    # iota format: replica_groups=[G,S]<=[N]...
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]<=\[\d+\]", line)
+    if m:
+        return int(m.group(2))
+    # explicit: replica_groups={{0,1,2,3},...}
+    m = re.search(r"replica_groups=\{\{([\d,]+)\}", line)
+    if m:
+        return len(m.group(1).split(","))
+    # empty groups = all devices
+    return world
+
+
+def parse_collectives(hlo_text: str, world: int) -> List[Dict]:
+    """Extract (kind, out_bytes, group) for every collective op."""
+    out = []
+    for line in hlo_text.splitlines():
+        m = re.search(r"=\s+((?:\([^)]*\)|\S+))\s+(" +
+                      "|".join(_COLLECTIVES) + r")(?:-start|-done)?\(", line)
+        if not m:
+            continue
+        type_str, kind = m.group(1), m.group(2)
+        if "-done(" in line:  # async pair: count only the start
+            continue
+        size = _shape_bytes(type_str)
+        if size == 0:
+            continue
+        out.append({"kind": kind, "bytes": size,
+                    "group": _group_size(line, world)})
+    return out
+
+
+def collective_seconds(colls: List[Dict], link_bw: float = ICI_BW) -> float:
+    t = 0.0
+    for c in colls:
+        s, p = c["bytes"], max(c["group"], 1)
+        frac = (p - 1) / p if p > 1 else 0.0
+        if c["kind"] == "all-reduce":
+            moved = 2 * s * frac
+        elif c["kind"] == "all-gather":
+            moved = s * frac
+        elif c["kind"] == "reduce-scatter":
+            moved = s * p * frac  # we parsed the (scattered) output
+        elif c["kind"] == "all-to-all":
+            moved = s * frac
+        else:  # collective-permute
+            moved = s
+        t += moved / link_bw
+    return t
+
+
+def collective_bytes_by_kind(colls: List[Dict]) -> Dict[str, int]:
+    out: Dict[str, int] = {}
+    for c in colls:
+        out[c["kind"]] = out.get(c["kind"], 0) + c["bytes"]
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    flops_per_device: float
+    bytes_per_device: float
+    n_chips: int
+    model_flops: float            # 6*N_active*tokens (train) etc.
+    collectives: Dict[str, int]
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / total compiled FLOPs — catches remat/redundancy."""
+        total = self.flops_per_device * self.n_chips
+        return self.model_flops / total if total else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of the compute roofline achieved if the dominant term
+        were the runtime: (model_flops/chips/peak) / bound."""
+        ideal = self.model_flops / self.n_chips / PEAK_FLOPS_BF16
+        return ideal / self.bound_s if self.bound_s else 0.0
+
+    def to_dict(self) -> dict:
+        return {
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "collective_s": self.collective_s, "dominant": self.dominant,
+            "flops_per_device": self.flops_per_device,
+            "bytes_per_device": self.bytes_per_device,
+            "n_chips": self.n_chips, "model_flops": self.model_flops,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "roofline_fraction": self.roofline_fraction,
+            "collective_bytes": self.collectives,
+        }
+
+
+def analyze(cost: dict, hlo_text: str, n_chips: int,
+            model_flops: float) -> Roofline:
+    """Primary source: the trip-count-aware HLO analyzer (XLA's own
+    cost_analysis counts while bodies once — see hlo_analyzer docstring).
+    ``cost`` (XLA's numbers) is kept as a floor/sanity reference."""
+    from repro.roofline.hlo_analyzer import analyze_hlo
+
+    hc = analyze_hlo(hlo_text, n_chips)
+    flops = max(hc.flops, float(cost.get("flops", 0.0)))
+    byts = max(hc.bytes, float(cost.get("bytes accessed", 0.0)))
+    colls = hc.collectives
+    return Roofline(
+        compute_s=flops / PEAK_FLOPS_BF16,
+        memory_s=byts / HBM_BW,
+        collective_s=collective_seconds(colls),
+        flops_per_device=flops, bytes_per_device=byts, n_chips=n_chips,
+        model_flops=model_flops,
+        collectives=collective_bytes_by_kind(colls))
+
+
+# ----------------------- model FLOPs accounting -------------------------- #
+def model_flops(cfg, shape) -> float:
+    """MODEL_FLOPS per the assignment: 6*N*D (train, dense), 6*N_active*D
+    (MoE); forward-only shapes use 2*N*D; decode uses 2*N_active per token."""
+    n_active = cfg.n_active_params()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence in the batch
+    return 2.0 * n_active * shape.global_batch
+
+
+# ------------------- Pallas-kernel-target memory model ------------------- #
+def kernel_attention_bytes(pattern, n: int, n_heads: int, head_dim: int,
+                           batch: int, block_q: int = 256,
+                           block_k: int = 256, dtype_bytes: int = 2) -> int:
+    """HBM bytes the SALO Pallas kernel moves for one attention layer
+    (TPU target): per grid cell, Q/K/V tiles in + out tile written once.
+    Score tensors stay in VMEM (the kernel's whole point) — this is the
+    memory-roofline term the blockwise-XLA dry-run CANNOT show on CPU
+    (its HLO materializes the interior; see EXPERIMENTS.md §Perf gemma).
+    """
+    from repro.core.scheduler import schedule
+
+    sched = schedule(pattern, n)
+    n_pad = -(-sched.n_work // max(block_q, block_k)) * max(block_q, block_k)
+    nq = n_pad // block_q
+    bh = batch * n_heads
+    total = 0
+    for band in sched.bands:
+        steps = band.kv_steps(block_q, block_k)
+        # q tile read once per (bh, i); k/v tiles per step; out written once
+        total += bh * nq * (block_q * head_dim          # q
+                            + steps * 2 * block_k * head_dim  # k+v stream
+                            + block_q * head_dim)       # out
+    return total * dtype_bytes

@@ -1,0 +1,313 @@
+"""Trip-count-aware HLO cost analyzer.
+
+``compiled.cost_analysis()`` counts a ``while`` body ONCE, regardless of trip
+count (verified empirically) — for scan-over-layers models that undercounts
+FLOPs, bytes and collectives by ~n_layers. This module re-derives the costs
+from ``compiled.as_text()``:
+
+1. split the module into computations,
+2. walk the call graph from ENTRY, assigning each computation an *execution
+   multiplier* (while bodies/conditions multiply by the XLA-annotated
+   ``known_trip_count``; fusions/calls inherit the caller's multiplier),
+3. count per computation:
+     * FLOPs: ``dot`` ops (2 x prod(output dims) x contraction size) —
+       the MXU-relevant compute; elementwise ops are ignored (documented
+       roofline approximation),
+     * bytes: operands + outputs of buffer-touching ops at computation level
+       (fusion internals excluded — they live in registers/VMEM, matching
+       XLA's "bytes accessed" semantics),
+     * collectives: kind, payload bytes, replica-group size,
+   each scaled by the multiplier.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Tuple
+
+_SHAPE_RE = re.compile(r"(pred|s8|u8|s16|u16|f16|bf16|s32|u32|f32|s64|u64|"
+                       r"f64|c64|c128|f8e4m3fn|f8e5m2)\[([\d,]*)\]")
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_SKIP_BYTES_OPS = ("parameter", "constant", "tuple", "get-tuple-element",
+                   "bitcast", "after-all", "iota")
+
+
+def _dims(dim_str: str) -> List[int]:
+    return [int(d) for d in dim_str.split(",") if d]
+
+
+def _nelems(dim_str: str) -> int:
+    n = 1
+    for d in _dims(dim_str):
+        n *= d
+    return n
+
+
+def _all_shape_bytes(segment: str) -> int:
+    return sum(_nelems(dims) * _DTYPE_BYTES[dt]
+               for dt, dims in _SHAPE_RE.findall(segment))
+
+
+@dataclasses.dataclass
+class Costs:
+    flops: float = 0.0
+    bytes: float = 0.0
+    collectives: List[Dict] = dataclasses.field(default_factory=list)
+
+
+def _split_computations(text: str) -> Dict[str, List[str]]:
+    comps: Dict[str, List[str]] = {}
+    cur = None
+    for line in text.splitlines():
+        # computation header: [ENTRY] %name (params...) -> type {
+        m = re.match(r"(?:ENTRY\s+)?%([\w\.\-]+)\s*\(.*->.*\{\s*$", line)
+        if m:
+            cur = m.group(1)
+            comps[cur] = []
+            continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        if cur is not None:
+            comps[cur].append(line)
+    return comps
+
+
+def _entry_name(text: str) -> str:
+    m = re.search(r"ENTRY\s+%?([\w\.\-]+)", text)
+    return m.group(1)
+
+
+# Single-computation attrs (body=%x, condition=%x, calls=%x, to_apply=%x)
+_CALL_ONE_RE = re.compile(r"(?:calls|to_apply|body|condition)=%([\w\.\-]+)")
+# List form: branch_computations={%a, %b} / called_computations={...}
+_CALL_LIST_RE = re.compile(
+    r"(?:branch_computations|called_computations)=\{([^}]*)\}")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+
+
+def _callees(line: str):
+    out = [m.group(1) for m in _CALL_ONE_RE.finditer(line)]
+    for m in _CALL_LIST_RE.finditer(line):
+        out.extend(n.strip().lstrip("%") for n in m.group(1).split(","))
+    return out
+
+
+# One instruction: %name = TYPE opkind(operands...), attrs...
+# Operands carry no type annotations in compiled HLO text, so shapes are
+# resolved through a per-computation symbol table.
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(.*?)\s+([a-z][a-z0-9\-]*)\(")
+_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+_ATTR_CUT_RE = re.compile(
+    r",\s*(?:metadata|backend_config|calls|to_apply|body|condition|"
+    r"custom_call_target|api_version|sharding|channel_id|replica_groups|"
+    r"dimensions|slice)=")
+
+
+def _parse_instr(line: str):
+    """-> (result_name, type_str, op_kind, operand_segment) or None."""
+    m = _INSTR_RE.match(line)
+    if not m:
+        return None
+    name, type_str, kind = m.groups()
+    rest = line[m.end():]
+    operands = _ATTR_CUT_RE.split(rest)[0]
+    return name, type_str, kind, operands
+
+
+def _op_kind(line: str) -> str:
+    p = _parse_instr(line)
+    return p[2] if p else ""
+
+
+def _group_size(line: str, world: int) -> int:
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]<=\[\d+\]", line)
+    if m:
+        return int(m.group(2))
+    m = re.search(r"replica_groups=\{\{([\d,]+)\}", line)
+    if m:
+        return len(m.group(1).split(","))
+    return world
+
+
+def analyze_hlo(text: str, world: int) -> Costs:
+    comps = _split_computations(text)
+    entry = _entry_name(text)
+
+    # --- pass 1: multipliers via BFS over the call graph ----------------- #
+    mult: Dict[str, float] = {entry: 1.0}
+    fusion_bodies = set()
+    order = [entry]
+    seen = {entry}
+    i = 0
+    while i < len(order):
+        name = order[i]
+        i += 1
+        m_here = mult[name]
+        for line in comps.get(name, ()):
+            trip = 1.0
+            tm = _TRIP_RE.search(line)
+            is_while = " while(" in line
+            if is_while and tm:
+                trip = float(tm.group(1))
+            is_fusion = _op_kind(line) == "fusion"
+            for callee in _callees(line):
+                if callee not in comps:
+                    continue
+                if is_fusion:
+                    fusion_bodies.add(callee)
+                factor = trip if is_while else 1.0
+                new = m_here * factor
+                if callee not in mult or new > mult[callee]:
+                    mult[callee] = new
+                if callee not in seen:
+                    seen.add(callee)
+                    order.append(callee)
+
+    # --- pass 2: per-computation costs x multiplier ---------------------- #
+    costs = Costs()
+    for name, lines in comps.items():
+        m_here = mult.get(name, 0.0)
+        if m_here == 0.0:
+            continue  # dead computation
+        in_fusion = name in fusion_bodies
+        # Symbol table: result name -> (type_str, bytes) for operand lookup.
+        table: Dict[str, Tuple[str, int]] = {}
+        parsed = []
+        for line in lines:
+            p = _parse_instr(line)
+            if p is None:
+                continue
+            rname, type_str, kind, operands = p
+            table[rname] = (type_str, _all_shape_bytes(type_str))
+            parsed.append((line, rname, type_str, kind, operands))
+
+        for line, rname, type_str, kind, operands in parsed:
+            # ---- FLOPs: dot ops (counted even inside fusion bodies) ----- #
+            if kind == "dot":
+                out_m = _SHAPE_RE.search(type_str)
+                out_elems = _nelems(out_m.group(2)) if out_m else 0
+                ops = _OPERAND_RE.findall(operands)
+                lhs_type = table.get(ops[0], ("", 0))[0] if ops else ""
+                lhs_m = _SHAPE_RE.search(lhs_type)
+                contract = 1
+                if lhs_m:
+                    lhs_dims = _dims(lhs_m.group(2))
+                    mc = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", line)
+                    if mc:
+                        for i in _dims(mc.group(1)):
+                            if i < len(lhs_dims):
+                                contract *= lhs_dims[i]
+                costs.flops += m_here * 2.0 * out_elems * contract
+
+            if (in_fusion or kind in _SKIP_BYTES_OPS
+                    or kind in ("while", "call", "conditional")):
+                continue  # fusion internals / control flow don't touch HBM
+            # ---- bytes: op-specific HBM traffic model ------------------- #
+            out_bytes = _all_shape_bytes(type_str)
+            op_sizes = [table.get(op, ("", 0))[1]
+                        for op in _OPERAND_RE.findall(operands)]
+            if kind in ("gather", "dynamic-slice"):
+                # reads only the gathered/sliced elements (+indices), not
+                # the whole operand
+                nbytes = 2 * out_bytes + sum(op_sizes[1:])
+            elif kind == "dynamic-update-slice":
+                # in-place RMW of the update region (XLA aliases the buffer)
+                upd = op_sizes[1] if len(op_sizes) > 1 else out_bytes
+                nbytes = 2 * upd + sum(op_sizes[2:])
+            elif kind == "scatter":
+                # read+write touched region ~= updates; indices read once
+                upd = op_sizes[2] if len(op_sizes) > 2 else out_bytes
+                idx = op_sizes[1] if len(op_sizes) > 1 else 0
+                nbytes = 2 * upd + idx
+            else:
+                nbytes = out_bytes + sum(op_sizes)
+            costs.bytes += m_here * nbytes
+            # ---- collectives -------------------------------------------- #
+            if kind in _COLLECTIVES and "-done(" not in line:
+                out_bytes = _all_shape_bytes(type_str)
+                if out_bytes:
+                    costs.collectives.append({
+                        "kind": kind, "bytes": out_bytes * m_here,
+                        "group": _group_size(line, world),
+                        "count": m_here})
+    return costs
+
+
+def count_fusion_bytes_only(text: str) -> float:
+    """Debug helper: bytes at entry level only (XLA-equivalent view)."""
+    return analyze_hlo(text, 1).bytes
+
+
+def bytes_by_op_kind(text: str, world: int) -> Dict[str, float]:
+    """Debug/profiling helper: per-op-kind byte totals (trip-count scaled) —
+    shows WHERE the memory roofline term comes from."""
+    comps = _split_computations(text)
+    entry = _entry_name(text)
+    mult: Dict[str, float] = {entry: 1.0}
+    fusion_bodies = set()
+    order = [entry]
+    seen = {entry}
+    i = 0
+    while i < len(order):
+        name = order[i]
+        i += 1
+        m_here = mult[name]
+        for line in comps.get(name, ()):
+            trip = 1.0
+            tm = _TRIP_RE.search(line)
+            is_while = " while(" in line
+            if is_while and tm:
+                trip = float(tm.group(1))
+            is_fusion = _op_kind(line) == "fusion"
+            for callee in _callees(line):
+                if callee not in comps:
+                    continue
+                if is_fusion:
+                    fusion_bodies.add(callee)
+                new = m_here * (trip if is_while else 1.0)
+                if callee not in mult or new > mult[callee]:
+                    mult[callee] = new
+                if callee not in seen:
+                    seen.add(callee)
+                    order.append(callee)
+    out: Dict[str, float] = {}
+    for name, lines in comps.items():
+        m_here = mult.get(name, 0.0)
+        if m_here == 0.0 or name in fusion_bodies:
+            continue
+        table = {}
+        parsed = []
+        for line in lines:
+            p_ = _parse_instr(line)
+            if p_ is None:
+                continue
+            rname, type_str, kind, operands = p_
+            table[rname] = _all_shape_bytes(type_str)
+            parsed.append((rname, type_str, kind, operands))
+        for rname, type_str, kind, operands in parsed:
+            if kind in _SKIP_BYTES_OPS or kind in ("while", "call",
+                                                   "conditional"):
+                continue
+            out_bytes = _all_shape_bytes(type_str)
+            op_sizes = [table.get(op, 0)
+                        for op in _OPERAND_RE.findall(operands)]
+            if kind in ("gather", "dynamic-slice"):
+                nb = 2 * out_bytes + sum(op_sizes[1:])
+            elif kind == "dynamic-update-slice":
+                upd = op_sizes[1] if len(op_sizes) > 1 else out_bytes
+                nb = 2 * upd + sum(op_sizes[2:])
+            elif kind == "scatter":
+                upd = op_sizes[2] if len(op_sizes) > 2 else out_bytes
+                nb = 2 * upd + (op_sizes[1] if len(op_sizes) > 1 else 0)
+            else:
+                nb = out_bytes + sum(op_sizes)
+            out[kind] = out.get(kind, 0.0) + m_here * nb
+    return out

@@ -1,0 +1,2 @@
+from repro.serve.engine import ServeConfig, ServeEngine
+from repro.serve import kv_cache

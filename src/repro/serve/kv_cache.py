@@ -1,0 +1,65 @@
+"""KV caches for serving: dense baseline and the SALO ring cache.
+
+Baseline (assignment's decode shapes): a full ``(B, seq_len, Hkv, hd)`` cache
+— slot == absolute position.
+
+**SALO ring cache** (beyond-paper serving optimization, EXPERIMENTS.md
+§Perf): under the paper's hybrid sparse pattern a decode step only ever reads
+the ``n_global`` sink keys plus the last ``window`` keys, so the cache needs
+``window + n_global`` slots regardless of context length — O(1) memory in
+sequence length, the serving-side mirror of the paper's O(n·w) training
+claim. Slots carry their absolute position; the position-based masks in
+:func:`repro.core.blockwise.decode_attention` make ring indexing transparent
+(out-of-window slots mask themselves out).
+
+Layout: slots [0, g) pinned to the global/sink tokens; slots [g, g+w) a ring
+keyed by ``position % window``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.patterns import HybridSparsePattern
+
+
+class RingCache(NamedTuple):
+    k: jax.Array           # (B, g + w, Hkv, hd)
+    v: jax.Array
+    positions: jax.Array   # (g + w,) absolute position per slot (-1 = empty)
+
+
+def ring_init(batch: int, window: int, n_global: int, n_kv_heads: int,
+              head_dim: int, dtype) -> RingCache:
+    size = n_global + window
+    return RingCache(
+        k=jnp.zeros((batch, size, n_kv_heads, head_dim), dtype),
+        v=jnp.zeros((batch, size, n_kv_heads, head_dim), dtype),
+        positions=jnp.full((size,), -1, jnp.int32))
+
+
+def ring_update(cache: RingCache, k_t: jax.Array, v_t: jax.Array, t,
+                window: int, n_global: int) -> RingCache:
+    """Insert the KV of position ``t`` (k_t: (B, 1, Hkv, hd))."""
+    slot = jnp.where(t < n_global, t, n_global + (t - n_global) % window)
+    k = jax.lax.dynamic_update_slice_in_dim(cache.k, k_t, slot, axis=1)
+    v = jax.lax.dynamic_update_slice_in_dim(cache.v, v_t, slot, axis=1)
+    pos = jax.lax.dynamic_update_slice_in_dim(
+        cache.positions, jnp.asarray(t, jnp.int32)[None], slot, axis=0)
+    return RingCache(k, v, pos)
+
+
+def ring_positions_mask(cache: RingCache):
+    """Positions array for decode_attention: empty slots -> huge (masked)."""
+    return jnp.where(cache.positions < 0, jnp.int32(2 ** 30), cache.positions)
+
+
+def bytes_per_layer(batch: int, seq_len: int, n_kv_heads: int, head_dim: int,
+                    dtype_bytes: int = 2, *, window: int | None = None,
+                    n_global: int = 0) -> int:
+    """Cache footprint accounting (drives the serving roofline numbers)."""
+    slots = seq_len if window is None else min(seq_len, window + n_global)
+    return 2 * batch * slots * n_kv_heads * head_dim * dtype_bytes

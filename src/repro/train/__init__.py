@@ -1,0 +1,1 @@
+from repro.train.trainer import TrainConfig, make_train_step, make_eval_step

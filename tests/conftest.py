@@ -1,0 +1,18 @@
+import numpy as np
+import pytest
+
+# NB: deliberately NO xla_force_host_platform_device_count here — smoke tests
+# and benches must see 1 device (dryrun.py sets 512 for itself only). Tests
+# that need a few devices live in tests/test_distributed.py, which spawns a
+# subprocess with the flag set.
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+def assert_allclose(a, b, rtol=2e-3, atol=2e-3):
+    np.testing.assert_allclose(np.asarray(a, np.float32),
+                               np.asarray(b, np.float32),
+                               rtol=rtol, atol=atol)

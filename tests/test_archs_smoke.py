@@ -1,0 +1,113 @@
+"""Per-architecture smoke tests (assignment requirement): reduced config of
+the same family, one forward/train step on CPU, output shapes + no NaNs —
+plus a decode step against the cache."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_smoke
+from repro.models.model import build_model
+
+
+def _batch(cfg, rng, B=2, S=64):
+    batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S))),
+             "labels": jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)))}
+    if cfg.encoder_decoder:
+        batch["audio_embeds"] = jnp.asarray(
+            rng.normal(size=(B, cfg.n_audio_frames, cfg.d_model)),
+            jnp.float32)
+    if cfg.n_vision_tokens:
+        batch["vision_embeds"] = jnp.asarray(
+            rng.normal(size=(B, S, cfg.d_model)), jnp.float32)
+        batch["vision_mask"] = jnp.asarray(
+            rng.integers(0, 2, (B, S)).astype(bool))
+    return batch
+
+
+@pytest.fixture(scope="module")
+def np_rng():
+    return np.random.default_rng(7)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_loss_grad(arch, np_rng):
+    cfg = get_smoke(arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = _batch(cfg, np_rng)
+    logits = jax.jit(model.forward)(params, batch)
+    assert logits.shape == (2, 64, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+    loss, metrics = model.loss(params, batch)
+    assert bool(jnp.isfinite(loss))
+    grads = jax.grad(lambda p: model.loss(p, batch)[0])(params)
+    gn = sum(jnp.sum(jnp.abs(g.astype(jnp.float32)))
+             for g in jax.tree.leaves(grads))
+    assert bool(jnp.isfinite(gn)) and float(gn) > 0
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_decode_step(arch, np_rng):
+    cfg = get_smoke(arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    B, maxlen = 2, 32
+    cache = model.init_cache(B, maxlen)
+    batch = _batch(cfg, np_rng, B=B, S=1)
+    bt = {k: v for k, v in batch.items() if k != "labels"}
+    step = jax.jit(model.decode_step)
+    for t in range(3):
+        logits, cache = step(params, cache, bt, t)
+        assert logits.shape == (B, 1, cfg.vocab_size)
+        assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+
+
+def test_decode_matches_forward_smollm(np_rng):
+    """Teacher-forced decode == full forward (same tokens), step by step."""
+    cfg = get_smoke("smollm-135m")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    B, S = 2, 24
+    batch = _batch(cfg, np_rng, B=B, S=S)
+    full = model.forward(params, batch)
+    cache = model.init_cache(B, S)
+    step = jax.jit(model.decode_step)
+    for t in range(S):
+        logits, cache = step(params, cache,
+                             {"tokens": batch["tokens"][:, t:t + 1]}, t)
+        np.testing.assert_allclose(
+            np.asarray(logits[:, 0], np.float32),
+            np.asarray(full[:, t], np.float32), rtol=2e-2, atol=2e-2)
+
+
+@pytest.mark.parametrize("arch", ["mamba2-370m", "recurrentgemma-9b"])
+def test_recurrent_decode_matches_forward(arch, np_rng):
+    """SSM/RG-LRU recurrent decode == chunked/scan full forward."""
+    cfg = get_smoke(arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    B, S = 2, 16
+    batch = _batch(cfg, np_rng, B=B, S=S)
+    full = model.forward(params, batch)
+    cache = model.init_cache(B, S)
+    step = jax.jit(model.decode_step)
+    outs = []
+    for t in range(S):
+        logits, cache = step(params, cache,
+                             {"tokens": batch["tokens"][:, t:t + 1]}, t)
+        outs.append(np.asarray(logits[:, 0], np.float32))
+    np.testing.assert_allclose(np.stack(outs, 1),
+                               np.asarray(full, np.float32),
+                               rtol=5e-2, atol=5e-2)
+
+
+def test_param_count_formulas():
+    """n_params() formula vs actual initialized parameter count."""
+    for arch in ("smollm-135m", "gemma-7b", "kimi-k2-1t-a32b"):
+        cfg = get_smoke(arch)
+        model = build_model(cfg)
+        params = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+        actual = sum(np.prod(p.shape) for p in jax.tree.leaves(params))
+        est = cfg.n_params()
+        assert 0.5 < actual / est < 2.0, (arch, actual, est)

@@ -1,0 +1,62 @@
+"""Pallas decode kernel vs the jnp decode engine, swept over shapes/dtypes
+(ring-cache layouts included)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import patterns as P
+from repro.core.attention import hybrid_decode_attention
+from repro.kernels.salo_decode import salo_decode
+
+RNG = np.random.default_rng(3)
+
+
+@pytest.mark.parametrize("H,Hkv,hd", [(8, 2, 32), (4, 4, 64), (6, 1, 128)])
+@pytest.mark.parametrize("dtype,tol", [(jnp.float32, 2e-3),
+                                       (jnp.bfloat16, 4e-2)])
+def test_decode_kernel_full_cache(H, Hkv, hd, dtype, tol):
+    pat = P.causal_sliding_window(24, n_sinks=3)
+    B, S = 2, 100
+    q = jnp.asarray(RNG.normal(size=(B, H, 1, hd)), dtype)
+    k = jnp.asarray(RNG.normal(size=(B, Hkv, S, hd)), dtype)
+    v = jnp.asarray(RNG.normal(size=(B, Hkv, S, hd)), dtype)
+    pos = jnp.arange(S, dtype=jnp.int32)
+    for t in (0, 30, 99):
+        ref = hybrid_decode_attention(q, k, v, t, pat)
+        out = salo_decode(q, k, v, pos, t, pattern=pat, block_s=32,
+                          interpret=True)
+        np.testing.assert_allclose(np.asarray(out, np.float32),
+                                   np.asarray(ref, np.float32),
+                                   rtol=tol, atol=tol, err_msg=str(t))
+
+
+def test_decode_kernel_ring_layout():
+    """Kernel on a ring cache == jnp engine with the same slot positions."""
+    from repro.serve.kv_cache import (ring_init, ring_update,
+                                      ring_positions_mask)
+    w_, g = 16, 2
+    pat = P.causal_sliding_window(w_, n_sinks=g)
+    B, Hkv, hd = 2, 2, 32
+    H = 4
+    n = 50
+    q_all = jnp.asarray(RNG.normal(size=(B, H, n, hd)), jnp.float32)
+    k_all = jnp.asarray(RNG.normal(size=(B, Hkv, n, hd)), jnp.float32)
+    v_all = jnp.asarray(RNG.normal(size=(B, Hkv, n, hd)), jnp.float32)
+    cache = ring_init(B, w_, g, Hkv, hd, jnp.float32)
+    for t in range(n):
+        cache = ring_update(cache,
+                            k_all[:, :, t:t + 1].transpose(0, 2, 1, 3),
+                            v_all[:, :, t:t + 1].transpose(0, 2, 1, 3),
+                            t, w_, g)
+        if t % 9 != 0:
+            continue
+        kc = cache.k.transpose(0, 2, 1, 3)
+        vc = cache.v.transpose(0, 2, 1, 3)
+        pos = ring_positions_mask(cache)
+        ref = hybrid_decode_attention(q_all[:, :, t:t + 1], kc, vc, t, pat,
+                                      cache_positions=pos)
+        out = salo_decode(q_all[:, :, t:t + 1], kc, vc, pos, t,
+                          pattern=pat, block_s=8, interpret=True)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=2e-3, atol=2e-3, err_msg=str(t))

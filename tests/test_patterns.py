@@ -1,0 +1,120 @@
+"""Pattern/mask/scheduler unit + property tests."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import patterns as P
+from repro.core.scheduler import schedule
+
+
+def test_sliding_window_mask_matches_definition():
+    pat = P.HybridSparsePattern(window=(-3, 2))
+    m = pat.mask(10)
+    for i in range(10):
+        for j in range(10):
+            assert m[i, j] == (-3 <= j - i <= 2)
+
+
+def test_causal_sliding_window_sinks():
+    pat = P.causal_sliding_window(4, n_sinks=2)
+    m = pat.mask(12)
+    for i in range(12):
+        for j in range(12):
+            expect = (j <= i) and (i - j < 4 or j < 2)
+            assert m[i, j] == expect, (i, j)
+
+
+def test_longformer_paper_sparsity():
+    """Paper Table 2: Longformer n=4096 w=512 g=1 -> sparsity 0.125."""
+    pat = P.longformer(512, n_global=1)
+    s = pat.sparsity(4096)
+    assert abs(s - 0.125) < 0.01, s
+
+
+def test_vil_stage_sparsities():
+    """Paper Table 2: ViL-stage1 0.072, ViL-stage2 0.288. Those are the
+    interior approximation window^2/grid^2 (no edge clipping); our exact
+    mask is necessarily <= that and close to it."""
+    for grid, paper in (((56, 56), 0.072), ((28, 28), 0.288)):
+        interior = 15 * 15 / (grid[0] * grid[1])
+        assert abs(interior - paper) < 0.002  # paper's formula recovered
+        exact = P.vil(grid, (15, 15), 1).sparsity(1 + grid[0] * grid[1])
+        assert exact <= interior + 1e-6
+        assert exact > 0.7 * interior  # same ballpark (edge effect only)
+
+
+def test_dilated_mask():
+    pat = P.dilated_window(4, 3)
+    m = pat.mask(20)
+    i = 10
+    attended = set(np.nonzero(m[i])[0])
+    expect = {j for j in range(20)
+              if (j - i) % 3 == 0 and -6 <= j - i <= 3}
+    assert attended == expect
+
+
+def test_2d_mask_neighbourhood():
+    pat = P.vil((5, 7), (3, 3), n_global=1)
+    m = pat.mask(1 + 35)
+    # global token attends everything and is attended by everything
+    assert m[0].all() and m[:, 0].all()
+    # token at grid (2,3) = index 1 + 2*7+3 = 18
+    i = 18
+    att = set(np.nonzero(m[i])[0]) - {0}
+    expect = {1 + y * 7 + x for y in (1, 2, 3) for x in (2, 3, 4)}
+    assert att == expect
+
+
+@given(w=st.integers(1, 9), d=st.integers(1, 4), n=st.integers(4, 64),
+       g=st.integers(0, 3), causal=st.booleans())
+@settings(max_examples=60, deadline=None)
+def test_schedule_bands_cover_mask(w, d, n, g, causal):
+    """Property: the band schedule + global column covers EXACTLY the
+    pattern mask (no pair missed, none double-counted)."""
+    pat = P.causal_sliding_window(w, n_sinks=g, dilation=d) if causal else \
+        P.HybridSparsePattern(window=(-(w // 2) * d, (w - w // 2 - 1) * d),
+                              dilation=d, n_global=g, global_rows=False)
+    sched = schedule(pat, n)
+    mask = pat.mask(n)
+    pos = sched.positions()
+    nw = sched.n_work
+    covered = np.zeros((n, n), dtype=int)
+    # band coverage in working space
+    for band in sched.bands:
+        for wi in range(nw):
+            for wj in range(max(0, wi + band.lo),
+                            min(nw, wi + band.hi + 1)):
+                pi, pj = pos[wi], pos[wj]
+                if pi < n and pj < n:
+                    wm = bool(np.asarray(sched.window_mask(pi, pj)))
+                    if wm:
+                        covered[pi, pj] += 1
+    # global column
+    for pi in range(n):
+        for pj in range(min(g, n)):
+            if bool(np.asarray(sched.global_col_mask(pi, pj))):
+                covered[pi, pj] += 1
+    assert (covered <= 1).all(), "double counted"
+    np.testing.assert_array_equal(covered.astype(bool), mask)
+
+
+@given(d=st.integers(1, 5), n=st.integers(3, 50))
+@settings(max_examples=30, deadline=None)
+def test_reorder_perm_is_permutation(d, n):
+    pat = P.causal_sliding_window(2, dilation=d)
+    sched = schedule(pat, n)
+    if sched.perm is None:
+        assert d == 1
+        return
+    inv = sched.inverse_perm()
+    assert sorted(sched.perm[sched.perm < n]) == list(range(n))
+    np.testing.assert_array_equal(sched.perm[inv], np.arange(n))
+
+
+def test_work_estimate_utilization():
+    """Paper §6.3: SALO's PE utilization > 75% on its workloads (the tiled
+    analog: useful pairs / executed pairs at the paper tile size)."""
+    pat = P.longformer(512, n_global=1)
+    sched = schedule(pat, 4096)
+    est = sched.work_estimate(32, 32)
+    assert est["utilization"] > 0.75, est

@@ -1,0 +1,87 @@
+"""Property tests for the renormalized merge (paper Eq. 2 / App. A)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+from hypothesis.extra import numpy as hnp
+
+from repro.core import renorm
+
+F = st.floats(-8, 8, allow_nan=False, width=32)
+
+
+def _state_from(scores, v):
+    st_ = renorm.empty_state(scores.shape[:-1], v.shape[-1])
+    return renorm.update(st_, jnp.asarray(scores), jnp.asarray(v))
+
+
+def _softmax_out(scores, v):
+    p = jax.nn.softmax(jnp.asarray(scores), axis=-1)
+    return jnp.einsum("...qk,...kd->...qd", p, jnp.asarray(v))
+
+
+@given(hnp.arrays(np.float32, (2, 3, 6), elements=F),
+       hnp.arrays(np.float32, (2, 6, 4), elements=F),
+       st.integers(1, 5))
+@settings(max_examples=40, deadline=None)
+def test_split_merge_exact(scores, v, cut):
+    """Splitting the key set at any point and merging == unsplit softmax."""
+    sa = _state_from(scores[..., :cut], v[:, :cut])
+    sb = _state_from(scores[..., cut:], v[:, cut:])
+    merged = renorm.finalize(renorm.merge(sa, sb))
+    np.testing.assert_allclose(np.asarray(merged),
+                               np.asarray(_softmax_out(scores, v)),
+                               rtol=1e-4, atol=1e-5)
+
+
+@given(hnp.arrays(np.float32, (1, 2, 9), elements=F),
+       hnp.arrays(np.float32, (1, 9, 3), elements=F))
+@settings(max_examples=30, deadline=None)
+def test_merge_associative_commutative(scores, v):
+    parts = [(_state_from(scores[..., i:i + 3], v[:, i:i + 3]))
+             for i in (0, 3, 6)]
+    a, b, c = parts
+    left = renorm.merge(renorm.merge(a, b), c)
+    right = renorm.merge(a, renorm.merge(b, c))
+    perm = renorm.merge(renorm.merge(c, a), b)
+    for other in (right, perm):
+        np.testing.assert_allclose(np.asarray(renorm.finalize(left)),
+                                   np.asarray(renorm.finalize(other)),
+                                   rtol=1e-4, atol=1e-5)
+
+
+def test_identity_element():
+    rng = np.random.default_rng(0)
+    scores = rng.normal(size=(2, 3, 5)).astype(np.float32)
+    v = rng.normal(size=(2, 5, 4)).astype(np.float32)
+    s = _state_from(scores, v)
+    e = renorm.empty_state((2, 3), 4)
+    for merged in (renorm.merge(s, e), renorm.merge(e, s)):
+        np.testing.assert_allclose(np.asarray(renorm.finalize(merged)),
+                                   np.asarray(renorm.finalize(s)), rtol=1e-5)
+
+
+def test_masked_update_rows_with_nothing():
+    """Fully-masked rows finalize to zeros, not NaN."""
+    s = renorm.empty_state((1, 2), 3)
+    scores = jnp.zeros((1, 2, 4))
+    v = jnp.ones((1, 4, 3))
+    mask = jnp.array([[[True] * 4, [False] * 4]])
+    s = renorm.update(s, scores, v, mask)
+    out = renorm.finalize(s)
+    assert bool(jnp.all(jnp.isfinite(out)))
+    np.testing.assert_allclose(np.asarray(out[0, 0]), np.ones(3), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(out[0, 1]), np.zeros(3))
+
+
+def test_extreme_scores_stable():
+    """Paper's fixed-point HW doesn't subtract a max; our float version must
+    survive +-large scores (DESIGN.md deviation)."""
+    s = renorm.empty_state((1, 1), 2)
+    s = renorm.update(s, jnp.array([[[300.0, -300.0]]]),
+                      jnp.ones((1, 2, 2)))
+    s = renorm.update(s, jnp.array([[[310.0]]]), 2 * jnp.ones((1, 1, 2)))
+    out = renorm.finalize(s)
+    assert bool(jnp.all(jnp.isfinite(out)))
+    # 310 dominates: output ~ 2
+    np.testing.assert_allclose(np.asarray(out), 2.0, rtol=1e-3)
