@@ -1,0 +1,208 @@
+"""Fused ExecutionPlan vs per-band-launch comparison -> BENCH_plan.json.
+
+For the paper's workloads (Longformer-4k, ViL grids from 8x9 up to 64x64)
+this reports, per workload:
+
+  * executed KV tiles of the fused plan (one visit per deduplicated tile)
+    vs the retired per-band walk (one tile walk per band + a global pass);
+  * kernel launches: 1 vs n_bands;
+  * measured wall-time of the fused single-pass blockwise engine vs a
+    faithful emulation of the per-band path (one plan pass per band + one
+    global-only pass, partials merged with renorm.merge — exactly the
+    retired ops.py data flow).
+
+Used by ``python -m benchmarks.run`` (section ``plan/``) and writable as a
+standalone JSON via ``python -m benchmarks.plan_stats [--out PATH]``.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import patterns as P
+from repro.core import renorm
+from repro.core.blockwise import blockwise_attention
+from repro.core.scheduler import build_plan, schedule
+
+WORKLOADS = [
+    # (name, pattern, n (None = implied), block_q, block_k)
+    ("longformer_4k", P.longformer(512, n_global=1), 4096, 128, 128),
+    ("vil_8x9", P.vil((8, 9), (3, 5), 1), None, 16, 16),
+    ("vil_16x16", P.vil((16, 16), (5, 5), 1), None, 32, 32),
+    ("vil_28x28", P.vil((28, 28), (15, 15), 1), None, 64, 64),
+    ("vil_64x64", P.vil((64, 64), (15, 15), 1), None, 128, 128),
+]
+
+
+def _working_stream(q, k, v, sched, plan):
+    """Reorder + pad to the plan's tile grid (what both engines do)."""
+    N = q.shape[1]
+    if sched.reordered:
+        perm = jnp.asarray(sched.perm)
+        take = jnp.clip(perm, 0, N - 1)
+        valid = (perm < N)[None, :, None]
+        q = jnp.where(valid, jnp.take(q, take, axis=1), 0)
+        k = jnp.where(valid, jnp.take(k, take, axis=1), 0)
+        v = jnp.where(valid, jnp.take(v, take, axis=1), 0)
+    pad = plan.n_pad - q.shape[1]
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0)))
+    return q, k, v, jnp.asarray(plan.positions_padded())
+
+
+def _band_pass(q_blk, k_pad, v_pad, pos_pad, sub_plan, band, scale):
+    """One retired-style band pass: the sub-plan's tile walk with the
+    working-space band restriction the per-band launches used (without it,
+    tile-granular walks of different bands double count shared pairs)."""
+    B, nq, Bq, D = q_blk.shape
+    bk = sub_plan.block_k
+    k_r = k_pad.reshape(B, sub_plan.nkb, bk, D)
+    v_r = v_pad.reshape(B, sub_plan.nkb, bk, D)
+    pos_r = pos_pad.reshape(sub_plan.nkb, bk)
+    pos_q = pos_pad.reshape(nq, Bq)
+    table = jnp.asarray(sub_plan.kv_blocks)
+    flags = jnp.asarray(sub_plan.flags)
+    wq = (jnp.arange(nq) * Bq)[:, None] + jnp.arange(Bq)[None, :]
+
+    def body(st, s):
+        blk = jax.lax.dynamic_index_in_dim(table, s, 1, keepdims=False)
+        fl = jax.lax.dynamic_index_in_dim(flags, s, 1, keepdims=False)
+        k_blk = jnp.take(k_r, blk, axis=1)
+        v_blk = jnp.take(v_r, blk, axis=1)
+        pos_k = jnp.take(pos_r, blk, axis=0)
+        scores = jnp.einsum("bnqd,bnkd->bnqk", q_blk, k_blk,
+                            preferred_element_type=jnp.float32) * scale
+        mask = sub_plan.step_mask(pos_q[:, :, None], pos_k[:, None, :],
+                                  fl[:, None, None])
+        if band is not None:
+            rel_w = (blk[:, None] * bk + jnp.arange(bk)[None, :]
+                     )[:, None, :] - wq[:, :, None]
+            mask = mask & (rel_w >= band.lo) & (rel_w <= band.hi)
+        return renorm.update(st, scores, v_blk, mask[None]), ()
+
+    st = renorm.empty_state((B, nq, Bq), D)
+    st, _ = jax.lax.scan(body, st, jnp.arange(sub_plan.max_steps,
+                                              dtype=jnp.int32))
+    return st
+
+
+def per_band_forward(q, k, v, pattern, block_q, block_k):
+    """The retired data flow: one windowed pass per band (band-restricted
+    masks, global stripped), one global-column pass, partials merged
+    pairwise — the timing/tile-count baseline the fused plan replaced.
+    (The retired kernel fused the global column into its first launch
+    rather than a separate pass, so this slightly favors the baseline.)"""
+    B, N, D = q.shape
+    scale = D ** -0.5
+    sched = schedule(pattern, N)
+    plan = build_plan(sched, block_q, block_k)
+    qw, kw, vw, pos = _working_stream(q, k, v, sched, plan)
+    q_blk = qw.reshape(B, plan.nq, block_q, D)
+
+    passes = [(build_plan(dataclasses.replace(sched, bands=(b,), n_global=0),
+                          block_q, block_k), b) for b in sched.bands]
+    if sched.n_global > 0:
+        passes.append((build_plan(dataclasses.replace(sched, bands=()),
+                                  block_q, block_k), None))
+    state = None
+    for sp, band in passes:
+        st = _band_pass(q_blk, kw, vw, pos, sp, band, scale)
+        state = st if state is None else renorm.merge(state, st)
+    return renorm.finalize(state, q.dtype).reshape(B, plan.n_pad, D)
+
+
+def _time(fn, *args, reps=3) -> float:
+    jax.block_until_ready(fn(*args))  # compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / reps
+
+
+def collect(measure: bool = True, d_head: int = 64) -> dict:
+    rng = np.random.default_rng(0)
+    out = {}
+    for name, pat, n, bq, bk in WORKLOADS:
+        n = n if n is not None else pat.seq_len()
+        sched = schedule(pat, n)
+        plan = build_plan(sched, bq, bk)
+        stats = plan.stats()
+        entry = {
+            "n": n, "block_q": bq, "block_k": bk,
+            "bands": len(sched.bands),
+            "fused": {
+                "launches": stats["launches"],
+                "executed_tiles": stats["executed_tiles"],
+                "executed_pairs": stats["executed_pairs"],
+                "utilization": stats["utilization"],
+            },
+            "per_band": {
+                "launches": stats["per_band_launches"],
+                "executed_tiles": stats["per_band_tiles"],
+                "executed_pairs": stats["per_band_tiles"] * bq * bk,
+                "utilization": stats["useful_pairs"]
+                / max(stats["per_band_tiles"] * bq * bk, 1),
+            },
+            "dedup_ratio": stats["per_band_tiles"]
+            / max(stats["executed_tiles"], 1),
+        }
+        if measure:
+            q, k, v = (jnp.asarray(rng.normal(size=(2, n, d_head)),
+                                   jnp.float32) for _ in range(3))
+            fused = jax.jit(lambda a, b, c, p=pat: blockwise_attention(
+                a, b, c, p, block_q=bq, block_k=bk))
+            legacy = jax.jit(lambda a, b, c, p=pat: per_band_forward(
+                a, b, c, p, bq, bk))
+            entry["fused"]["wall_s"] = _time(fused, q, k, v)
+            entry["per_band"]["wall_s"] = _time(legacy, q, k, v)
+            entry["wall_speedup"] = (entry["per_band"]["wall_s"]
+                                     / entry["fused"]["wall_s"])
+        out[name] = entry
+    return out
+
+
+def plan_benchmark(rows, measure: bool = True,
+                   out_path: str = "BENCH_plan.json") -> dict:
+    """benchmarks.run section: report + write BENCH_plan.json."""
+    data = collect(measure=measure)
+    for name, e in data.items():
+        rows.append((f"plan/{name}/fused_tiles", e["fused"]["executed_tiles"],
+                     f"launches={e['fused']['launches']}"))
+        rows.append((f"plan/{name}/per_band_tiles",
+                     e["per_band"]["executed_tiles"],
+                     f"launches={e['per_band']['launches']}"))
+        rows.append((f"plan/{name}/dedup_ratio", e["dedup_ratio"],
+                     "per_band_tiles/fused_tiles"))
+        if "wall_speedup" in e:
+            rows.append((f"plan/{name}/wall_speedup", e["wall_speedup"],
+                         f"fused={e['fused']['wall_s']*1e3:.1f}ms_perband="
+                         f"{e['per_band']['wall_s']*1e3:.1f}ms"))
+    with open(out_path, "w") as f:
+        json.dump(data, f, indent=1, sort_keys=True)
+    return data
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="BENCH_plan.json")
+    ap.add_argument("--no-measure", action="store_true",
+                    help="static tile/launch stats only (no wall-time)")
+    args = ap.parse_args()
+    rows = []
+    plan_benchmark(rows, measure=not args.no_measure, out_path=args.out)
+    print("name,value,derived")
+    for name, value, derived in rows:
+        print(f"{name},{value:.6g},{derived}")
+    print(f"# wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -18,11 +18,13 @@ def main() -> None:
                     help="skip the slow measured-speedup benchmarks")
     args = ap.parse_args()
 
-    from benchmarks import paper_claims
+    from benchmarks import paper_claims, plan_stats
 
     rows = []
     paper_claims.sec63_sanger_comparison(rows)
     paper_claims.table3_quantization(rows)
+    # ExecutionPlan: fused single-launch vs per-band-launch (BENCH_plan.json)
+    plan_stats.plan_benchmark(rows, measure=not args.quick)
     if not args.quick:
         paper_claims.fig7_speedup(rows)
         paper_claims.sec21_quadratic_scaling(rows)
@@ -43,6 +45,10 @@ def main() -> None:
             not 1.0 < d["sec63/salo_vs_sanger_speedup"] < 2.5:
         failures.append(("sanger_speedup", d["sec63/salo_vs_sanger_speedup"],
                          "in (1, 2.5)"))
+    for k, v in d.items():
+        # multi-band workloads: the plan's dedup must be real, not cosmetic
+        if k.startswith("plan/vil") and k.endswith("dedup_ratio") and v <= 1.0:
+            failures.append((k, v, "> 1.0 (fused < sum of per-band walks)"))
     if failures:
         for f in failures:
             print(f"CHECK-FAILED: {f}", file=sys.stderr)

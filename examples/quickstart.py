@@ -49,8 +49,18 @@ ref_dil = hybrid_attention(q, k, v, dil, impl="dense_ref")
 print(f"dilated blockwise vs oracle: "
       f"{float(jnp.max(jnp.abs(out_dil - ref_dil))):.2e}")
 
-# 5. ViL 2-D windows lower to a union of bands.
+# 5. ViL 2-D windows lower to a union of bands...
 pat2d = vil((16, 32), (5, 5), n_global=2)  # 16x32 grid + 2 global tokens
 s2 = schedule(pat2d, pat2d.seq_len())
 print(f"\nViL 2-D pattern -> {len(s2.bands)} bands: {s2.bands[:3]}...")
+
+# 6. ...and the ExecutionPlan fuses all bands + the global column into ONE
+#    deduplicated tile walk = one kernel launch (vs one launch per band).
+plan = s2.plan(32, 32)
+st = plan.stats()
+print(f"ExecutionPlan: {st['launches']} launch, "
+      f"{st['executed_tiles']} tiles "
+      f"(per-band walk: {st['per_band_launches']} launches, "
+      f"{st['per_band_tiles']} tiles -> "
+      f"{st['per_band_tiles'] / st['executed_tiles']:.1f}x dedup)")
 print("\nOK")

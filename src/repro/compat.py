@@ -1,0 +1,48 @@
+"""jax version compatibility shims.
+
+The repo targets the jax API current at HEAD (``jax.make_mesh(...,
+axis_types=...)``, ``jax.shard_map``, ``pltpu.CompilerParams``) but must run
+on the pinned 0.4.x toolchain too. Every version-sensitive construct goes
+through here so the rest of the codebase reads like modern jax.
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_mesh", "shard_map", "tpu_compiler_params"]
+
+
+def make_mesh(axis_shapes, axis_names, **kwargs):
+    """``jax.make_mesh`` accepting (and dropping, pre-AxisType) axis_types."""
+    try:
+        return jax.make_mesh(axis_shapes, axis_names, **kwargs)
+    except TypeError:
+        kwargs.pop("axis_types", None)
+        return jax.make_mesh(axis_shapes, axis_names, **kwargs)
+
+
+def _resolve_shard_map():
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map, "check_vma"
+    from jax.experimental.shard_map import shard_map as sm
+    return sm, "check_rep"
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma=None):
+    """jax.shard_map with the check_vma/check_rep rename bridged."""
+    sm, kw = _resolve_shard_map()
+    kwargs = {} if check_vma is None else {kw: check_vma}
+    return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kwargs)
+
+
+def tpu_compiler_params(**kwargs):
+    """pltpu.CompilerParams (renamed from TPUCompilerParams)."""
+    from jax.experimental.pallas import tpu as pltpu
+    cls = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+    return cls(**kwargs)
+
+
+def _axis_type_auto(n: int):
+    """(AxisType.Auto,) * n where supported, else None (old make_mesh)."""
+    at = getattr(jax.sharding, "AxisType", None)
+    return (at.Auto,) * n if at is not None else None

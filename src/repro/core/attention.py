@@ -3,10 +3,20 @@
 ``hybrid_attention(q, k, v, pattern, impl=...)`` with q/k/v ``(B, H, N, D)``
 (batch, heads, seq, head_dim — the model-facing layout).
 
+Every sparse engine executes the same lowering pipeline (core/scheduler.py):
+
+    HybridSparsePattern --schedule()--> BandSchedule --plan()--> ExecutionPlan
+
+The ExecutionPlan is the single source of truth for the tile walk and the
+per-step masks: flat per-query-block step tables covering the union of all
+bands plus the global-key tiles, deduplicated to one visit per KV tile.
+
 Engines:
   * ``dense_ref``          O(n^2) masked oracle (tests/small shapes)
-  * ``blockwise``          pure-JAX SALO schedule (training, dry-run) [default]
-  * ``pallas``             Pallas TPU kernel (real-hardware target)
+  * ``blockwise``          the plan on XLA: one lax.scan over the step table
+                           (training, dry-run) [default]
+  * ``pallas``             the plan on TPU: ONE table-driven pallas_call,
+                           step table streamed via scalar prefetch
   * ``pallas_interpret``   same kernel, interpret mode (CPU numerics check)
 
 All engines are drop-in equivalent (tested to tolerance); training autodiffs

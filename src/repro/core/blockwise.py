@@ -1,17 +1,25 @@
-"""Banded blockwise attention in pure JAX — SALO's schedule on XLA.
+"""Plan-driven blockwise attention in pure JAX — SALO's schedule on XLA.
 
-This is the *algorithmic twin* of the Pallas kernel: identical band walk,
-identical masks, identical renormalized merge. It exists because
+This is the *algorithmic twin* of the Pallas kernel: it walks the SAME
+:class:`repro.core.scheduler.ExecutionPlan` step tables with the SAME
+per-step masks (``plan.step_mask``), folded through the same renormalized
+online-softmax state. It exists because
 
 1. training needs autodiff (everything here is differentiable jnp),
 2. the CPU-only dry-run must lower something honest for roofline analysis
    (Pallas TPU kernels cannot be lowered by the CPU backend).
 
+One ``lax.scan`` over ``plan.max_steps`` executes every band AND the global
+column — overlapping KV tiles deduplicated to one visit, no per-band passes,
+no separate global partial. Global rows (global queries attend everything)
+are a dense g-row epilogue shared with the kernel wrapper.
+
 Shapes: q, k, v are ``(B, N, D)`` where ``B`` folds batch*heads. The public
 model-facing API lives in :mod:`repro.core.attention`.
 
-Complexity per band: O(N * (band_width + 2*block) * D) — linear in N, the
-paper's claim.
+Complexity: O(N * deduped_tiles_per_block * block_k * D) — linear in N for
+banded patterns, the paper's claim, and strictly fewer tiles than the
+per-band walk whenever bands overlap (ViL).
 """
 from __future__ import annotations
 
@@ -23,7 +31,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import renorm
-from repro.core.scheduler import BIG, Band, BandSchedule, _round_up, schedule
+from repro.core.scheduler import (BIG, STEP_WINDOW, BandSchedule,
+                                  ExecutionPlan, _round_up, schedule)
 from repro.core.patterns import HybridSparsePattern
 
 
@@ -32,103 +41,84 @@ def _dot(a, b):
                       preferred_element_type=jnp.float32)
 
 
-def _band_partial(state: renorm.PartialState, q_blk, k_pad, v_pad, pos_pad,
-                  sched: BandSchedule, band: Band, block_q: int, block_k: int,
-                  scale: float) -> renorm.PartialState:
-    """Fold one band into the running partial state.
+def _plan_partial(state: renorm.PartialState, q_blk, k_pad, v_pad, pos_pad,
+                  plan: ExecutionPlan, scale: float) -> renorm.PartialState:
+    """Fold the WHOLE plan (all bands + global column) into the state.
 
     q_blk: (B, nq, Bq, D); k_pad/v_pad: (B, n_pad, D); pos_pad: (n_pad,).
-    state: PartialState over (B, nq, Bq).
-
-    Fast path (Bq == Bk): the KV tile index for query block i at band step s
-    is ``i + lo//Bk + s`` — a CONSTANT shift per step — so the banded walk is
-    a sliced view of the padded KV stream, not a gather. No per-block index
-    materialization; XLA fuses the slice into the matmul operand
-    (EXPERIMENTS.md §Perf gemma/prefill_32k).
+    state: PartialState over (B, nq, Bq). One scan step = one table column:
+    every query block gathers its step-``s`` KV tile and applies the
+    flag-gated union mask. Padding steps (flags == 0) mask to nothing.
     """
     B, nq, Bq, D = q_blk.shape
-    n_pad = k_pad.shape[1]
-    nkb = n_pad // block_k
+    bk = plan.block_k
+    nkb = plan.nkb
     pos_q = pos_pad.reshape(nq, Bq)
-    steps = band.kv_steps(Bq, block_k)
 
-    # Working-space indices: restrict each pair to ITS band so overlapping
-    # tile walks of different bands (ViL's 15 bands) never double count.
-    wq = (jnp.arange(nq) * Bq)[:, None] + jnp.arange(Bq)[None, :]  # (nq, Bq)
-
-    def masked_update(st, scores, v_blk, blk, pos_k):
-        mask = sched.window_mask(pos_q[:, :, None], pos_k[:, None, :])
-        rel_w = (blk[:, None] * block_k + jnp.arange(block_k)[None, :]
-                 )[:, None, :] - wq[:, :, None]   # (nq, Bq, Bk) working rel
-        mask = mask & (rel_w >= band.lo) & (rel_w <= band.hi)
-        return renorm.update(st, scores, v_blk, mask[None])
-
-    if Bq == block_k:
+    # Fast path (single band, no global, Bq == Bk): the plan's tile walk is
+    # the affine shift ``i + c0 + s`` — a CONSTANT shift per step — so the
+    # banded walk is a sliced view of the padded KV stream, not a gather.
+    # No per-block index materialization; XLA fuses the slice into the
+    # matmul operand (EXPERIMENTS.md §Perf gemma/prefill_32k). Out-of-range
+    # tiles carry PAD_SENTINEL positions and mask to nothing.
+    sched = plan.sched
+    if len(sched.bands) == 1 and sched.n_global == 0 and Bq == bk:
         import math as _math
-        c0 = _math.floor(band.lo / block_k)
+        band = sched.bands[0]
+        steps = band.kv_steps(Bq, bk)
+        c0 = _math.floor(band.lo / bk)
         c1 = c0 + steps - 1
-        lpad = max(0, -c0) * block_k
-        rpad = max(0, c1) * block_k
+        lpad = max(0, -c0) * bk
+        rpad = max(0, c1) * bk
+        n_pad = k_pad.shape[1]
         k_w = jnp.pad(k_pad, ((0, 0), (lpad, rpad), (0, 0)))
         v_w = jnp.pad(v_pad, ((0, 0), (lpad, rpad), (0, 0)))
         pos_w = jnp.pad(pos_pad, (lpad, rpad), constant_values=BIG)
 
-        def body(carry, s):
-            st = carry
-            start = (c0 + s) * block_k + lpad     # >= 0 by construction
+        def body(st, s):
+            start = (c0 + s) * bk + lpad     # >= 0 by construction
             k_blk = jax.lax.dynamic_slice_in_dim(
-                k_w, start, n_pad, axis=1).reshape(B, nq, block_k, D)
+                k_w, start, n_pad, axis=1).reshape(B, nq, bk, D)
             v_blk = jax.lax.dynamic_slice_in_dim(
-                v_w, start, n_pad, axis=1).reshape(B, nq, block_k, D)
+                v_w, start, n_pad, axis=1).reshape(B, nq, bk, D)
             pos_k = jax.lax.dynamic_slice_in_dim(
-                pos_w, start, n_pad).reshape(nq, block_k)
+                pos_w, start, n_pad).reshape(nq, bk)
             scores = _dot(q_blk, k_blk) * scale
-            blk = jnp.arange(nq, dtype=jnp.int32) + (c0 + s)
-            return masked_update(st, scores, v_blk, blk, pos_k), ()
-    else:
-        k_r = k_pad.reshape(B, nkb, block_k, D)
-        v_r = v_pad.reshape(B, nkb, block_k, D)
-        pos_r = pos_pad.reshape(nkb, block_k)
-        s0 = np.array([band.kv_start_block(i, Bq, block_k)
-                       for i in range(nq)])
-        s0 = jnp.asarray(s0, jnp.int32)
+            mask = plan.step_mask(pos_q[:, :, None], pos_k[:, None, :],
+                                  STEP_WINDOW)
+            return renorm.update(st, scores, v_blk, mask[None]), ()
 
-        def body(carry, s):
-            st = carry
-            blk = s0 + s                          # (nq,) signed tile index
-            ok = (blk >= 0) & (blk < nkb)         # window-split validity
-            blk_c = jnp.clip(blk, 0, nkb - 1)
-            k_blk = jnp.take(k_r, blk_c, axis=1)  # (B, nq, Bk, D)
-            v_blk = jnp.take(v_r, blk_c, axis=1)
-            pos_k = jnp.take(pos_r, blk_c, axis=0)
-            pos_k = jnp.where(ok[:, None], pos_k, BIG)  # clamped dup guard
-            scores = _dot(q_blk, k_blk) * scale
-            return masked_update(st, scores, v_blk, blk, pos_k), ()
+        state, _ = jax.lax.scan(body, state,
+                                jnp.arange(steps, dtype=jnp.int32))
+        return state
 
-    state, _ = jax.lax.scan(body, state, jnp.arange(steps, dtype=jnp.int32))
+    # General path: gather each step's KV tile by the plan table.
+    k_r = k_pad.reshape(B, nkb, bk, D)
+    v_r = v_pad.reshape(B, nkb, bk, D)
+    pos_r = pos_pad.reshape(nkb, bk)
+    table = jnp.asarray(plan.kv_blocks)    # (nq, max_steps) int32
+    flags = jnp.asarray(plan.flags)        # (nq, max_steps) int32
+
+    def body(st, s):
+        blk = jax.lax.dynamic_index_in_dim(table, s, axis=1,
+                                           keepdims=False)      # (nq,)
+        fl = jax.lax.dynamic_index_in_dim(flags, s, axis=1,
+                                          keepdims=False)       # (nq,)
+        k_blk = jnp.take(k_r, blk, axis=1)                      # (B,nq,Bk,D)
+        v_blk = jnp.take(v_r, blk, axis=1)
+        pos_k = jnp.take(pos_r, blk, axis=0)                    # (nq, Bk)
+        scores = _dot(q_blk, k_blk) * scale
+        mask = plan.step_mask(pos_q[:, :, None], pos_k[:, None, :],
+                              fl[:, None, None])
+        return renorm.update(st, scores, v_blk, mask[None]), ()
+
+    state, _ = jax.lax.scan(body, state,
+                            jnp.arange(plan.max_steps, dtype=jnp.int32))
     return state
 
 
-def _global_col_partial(state, q_blk, k_orig, v_orig, pos_pad, sched,
-                        block_k: int, scale: float):
-    """Global-column pass: every query vs. the first n_global ORIGINAL keys.
-
-    Mirrors SALO's global PE column tapping the un-reordered stream."""
-    B, nq, Bq, D = q_blk.shape
-    g = sched.n_global
-    gp = min(_round_up(max(g, 1), min(block_k, 128)), k_orig.shape[1])
-    kg = k_orig[:, :gp]
-    vg = v_orig[:, :gp]
-    pos_g = jnp.arange(gp, dtype=jnp.int32)
-    pos_q = pos_pad.reshape(nq, Bq)
-    scores = _dot(q_blk, kg[:, None]) * scale     # (B, nq, Bq, gp)
-    mask = sched.global_col_mask(pos_q[None, :, :, None],
-                                 pos_g[None, None, None, :])
-    mask = mask & (pos_g < g)[None, None, None, :]
-    return renorm.update(state, scores, vg[:, None], mask)
-
-
-def _global_rows(q_orig, k_orig, v_orig, sched, scale: float, out_dtype):
+def _global_rows(q_orig, k_orig, v_orig, sched: BandSchedule, scale: float,
+                 out_dtype):
     """Global-row pass: the first n_global queries attend ALL keys (original
     order) — SALO's global PE row. Returns (B, g, D)."""
     g = sched.n_global
@@ -150,10 +140,11 @@ def blockwise_attention(q: jax.Array, k: jax.Array, v: jax.Array,
                         block_q: int = 128, block_k: int = 128,
                         scale: Optional[float] = None,
                         return_state: bool = False):
-    """Hybrid sparse attention via the SALO band schedule. q,k,v: (B, N, D)."""
+    """Hybrid sparse attention via the SALO ExecutionPlan. q,k,v: (B, N, D)."""
     B, N, D = q.shape
     scale = (D ** -0.5) if scale is None else scale
     sched = schedule(pattern, N)
+    plan = sched.plan(block_q, block_k)
     out_dtype = q.dtype
 
     # --- data reordering (dilation) ------------------------------------ #
@@ -167,32 +158,24 @@ def blockwise_attention(q: jax.Array, k: jax.Array, v: jax.Array,
     else:
         qw, kw, vw = q, k, v
 
-    # --- sequence splitting: pad to tile grid --------------------------- #
-    n_pad = _round_up(sched.n_work, max(block_q, block_k))
-    pad = n_pad - qw.shape[1]
+    # --- sequence splitting: pad to the plan's tile grid ----------------- #
+    pad = plan.n_pad - qw.shape[1]
     if pad:
         qw = jnp.pad(qw, ((0, 0), (0, pad), (0, 0)))
         kw = jnp.pad(kw, ((0, 0), (0, pad), (0, 0)))
         vw = jnp.pad(vw, ((0, 0), (0, pad), (0, 0)))
-    pos = np.full(n_pad, BIG, dtype=np.int32)
-    pos[: sched.n_work] = sched.positions()
-    pos = jnp.asarray(pos)
+    pos = jnp.asarray(plan.positions_padded())
 
-    nq = n_pad // block_q
+    nq = plan.nq
     q_blk = qw.reshape(B, nq, block_q, D)
 
     state = renorm.empty_state((B, nq, block_q), D)
-    for band in sched.bands:  # static unroll; ViL has 15, most LMs 1
-        state = _band_partial(state, q_blk, kw, vw, pos, sched, band,
-                              block_q, block_k, scale)
-    if sched.n_global > 0:
-        state = _global_col_partial(state, q_blk, k, v, pos, sched,
-                                    block_k, scale)
+    state = _plan_partial(state, q_blk, kw, vw, pos, plan, scale)
 
     if return_state:
         return state
 
-    out = renorm.finalize(state, out_dtype).reshape(B, n_pad, D)
+    out = renorm.finalize(state, out_dtype).reshape(B, plan.n_pad, D)
 
     # --- undo reordering / padding -------------------------------------- #
     if sched.reordered:

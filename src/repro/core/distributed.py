@@ -23,13 +23,14 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.compat import shard_map
 
 from repro.core import renorm
 from repro.core.blockwise import blockwise_attention, _dot
 from repro.core.patterns import HybridSparsePattern
-from repro.core.scheduler import schedule
+from repro.core.scheduler import PAD_SENTINEL, schedule
 
 
 def _local_banded(q, k, v, pos_q, pos_k, pattern, scale, block_q, block_k):
@@ -73,7 +74,7 @@ def sequence_parallel_attention(
         state = _local_banded(q_l, k_l, v_l, pos_l, pos_l, pattern, scale_,
                               0, 0)
         pos_prev = pos_l - n_local  # idx==0 receives wrap: mask via pos<0
-        pos_prev = jnp.where(pos_prev < 0, jnp.int32(2 ** 30 - 2 ** 20),
+        pos_prev = jnp.where(pos_prev < 0, jnp.int32(PAD_SENTINEL),
                              pos_prev)
         st_prev = _local_banded(q_l, k_prev, v_prev, pos_l, pos_prev,
                                 pattern, scale_, 0, 0)
@@ -83,7 +84,7 @@ def sequence_parallel_attention(
             v_next = jax.lax.ppermute(v_l, axis, left)
             pos_next = pos_l + n_local
             pos_next = jnp.where(pos_next >= N,
-                                 jnp.int32(2 ** 30 - 2 ** 20), pos_next)
+                                 jnp.int32(PAD_SENTINEL), pos_next)
             st_next = _local_banded(q_l, k_next, v_next, pos_l, pos_next,
                                     pattern, scale_, 0, 0)
             state = renorm.merge(state, st_next)

@@ -1,20 +1,34 @@
-"""Data scheduler (paper §4): pattern -> executable band schedule.
+"""Data scheduler (paper §4): pattern -> band schedule -> ExecutionPlan.
 
-Transforms a :class:`HybridSparsePattern` into the form the compute engines
-(blockwise JAX / Pallas kernel) execute directly:
+The lowering pipeline every engine shares:
 
-* **data reordering** (paper §4.2): dilation-``d`` patterns are turned into
-  plain sliding windows by the stride-``d`` permutation that groups
+    HybridSparsePattern --schedule()--> BandSchedule --plan()--> ExecutionPlan
+
+**BandSchedule** (this paper's data scheduler, §4.2):
+
+* **data reordering**: dilation-``d`` patterns are turned into plain sliding
+  windows by the stride-``d`` permutation that groups
   ``q_i, q_{i+d}, q_{i+2d}, ...``. Masks downstream are always evaluated on
   *original* positions carried through the permutation, so reordering only
   changes locality, never semantics.
 * **band lowering**: 2-D (ViL) windows become a union of 1-D bands, one per
   row offset ``dy``: ``[dy*W - ww//2, dy*W + ww//2]``.
-* **data splitting** (paper §4.2): sequence splitting = query blocks of
-  ``block_q``; window splitting = KV tiles of ``block_k`` merged with the
+* **data splitting**: sequence splitting = query blocks of ``block_q``;
+  window splitting = KV tiles of ``block_k`` merged with the
   renormalization of :mod:`repro.core.renorm`.
 
-The schedule is pure static metadata (numpy only) — safe to build at trace
+**ExecutionPlan** (the IR the engines execute): flat, static, per-query-block
+step tables. For each query block, the KV tiles it must visit — the union of
+every band's tile walk *plus* the tiles holding global keys — deduplicated to
+one visit per tile, each visit tagged with the set of bands covering it and
+whether it carries global-column work. One (q_block, kv_tile) pair is visited
+at most once, so masks are evaluated exactly once per attended pair: the
+multi-band + global hybrid becomes a single table-driven pass (one Pallas
+launch / one scan) instead of one launch per band plus global special cases.
+This mirrors SALO's scheduler packing band segments so global PEs compute
+"simultaneously with the same input vectors" as the window PEs.
+
+Both levels are pure static metadata (numpy only) — safe to build at trace
 time and cache.
 """
 from __future__ import annotations
@@ -28,10 +42,17 @@ import numpy as np
 
 from repro.core.patterns import HybridSparsePattern
 
-# Sentinel original-position for padding slots. Must fit int32 (JAX default
-# integer width) *and* keep pos_j - pos_i inside int32 — any mask comparison
-# against it must fail via the `pos < n` in-range guard.
+# Sentinel original-position for padding slots — THE one padding sentinel,
+# shared by every cache/halo/kernel path (``PAD_SENTINEL`` is the public
+# name). Must fit int32 (JAX default integer width) *and* keep pos_j - pos_i
+# inside int32 — any mask comparison against it must fail via the `pos < n`
+# in-range guard or a window-distance check.
 BIG = 2 ** 31 - 2 ** 20
+PAD_SENTINEL = BIG
+
+# ExecutionPlan step flags: which mask components a step evaluates.
+STEP_WINDOW = 1   # some band covers this (q_block, kv_tile) visit
+STEP_GLOBAL = 2   # the KV tile holds global-prefix keys
 
 
 def _round_up(x: int, m: int) -> int:
@@ -65,14 +86,21 @@ class BandSchedule:
     causal: bool
     pattern: HybridSparsePattern
 
-    # A schedule is a pure function of (pattern, n): hash/eq on those so the
-    # numpy perm array doesn't break jit static-arg hashing.
+    # hash/eq over every field except the numpy perm array (unhashable, and
+    # derived from (pattern, n) anyway) so jit static-arg hashing works AND
+    # dataclasses.replace'd variants — band subsets / global-stripped
+    # schedules, the per-band-launch benchmark baseline — never alias the
+    # original in the schedule/plan lru caches.
+    def _key(self):
+        return (self.n, self.n_work, self.pattern, self.bands,
+                self.n_global, self.global_rows, self.causal)
+
     def __hash__(self):
-        return hash((self.n, self.pattern))
+        return hash(self._key())
 
     def __eq__(self, other):
         return (isinstance(other, BandSchedule)
-                and self.n == other.n and self.pattern == other.pattern)
+                and self._key() == other._key())
 
     # ------------------------------------------------------------------ #
     @property
@@ -144,20 +172,41 @@ class BandSchedule:
             m = m & (pos_j <= pos_i)
         return m & ~self.window_mask(pos_i, pos_j)
 
+    def step_mask(self, pos_i, pos_j, flags):
+        """The ExecutionPlan's per-step mask — THE mask both engines apply.
+
+        ``flags`` (int, broadcastable against the (q, k) tile) selects which
+        components this step evaluates: STEP_WINDOW gates the banded window
+        term, STEP_GLOBAL the global-column term (disjoint from the window
+        by construction — the window evaluation is shared between the two
+        terms rather than recomputed via global_col_mask). ``flags == 0``
+        steps are padding no-ops.
+        """
+        import jax.numpy as jnp
+
+        flags = jnp.asarray(flags)
+        w = self.window_mask(pos_i, pos_j)
+        m = w & ((flags & STEP_WINDOW) != 0)
+        if self.n_global > 0:
+            gcol = (pos_j < self.n_global) & (pos_i < self.n) & ~w
+            if self.causal:
+                gcol = gcol & (pos_j <= pos_i)
+            m = m | (gcol & ((flags & STEP_GLOBAL) != 0))
+        return m
+
     # ------------------------------------------------------------------ #
+    def plan(self, block_q: int, block_k: int) -> "ExecutionPlan":
+        """Lower this schedule into the deduplicated step-table IR."""
+        return build_plan(self, block_q, block_k)
+
     def work_estimate(self, block_q: int, block_k: int) -> dict:
-        """Tile-level work accounting (drives the utilization benchmark)."""
-        n_pad = _round_up(self.n_work, max(block_q, block_k))
-        nq = n_pad // block_q
-        steps = sum(b.kv_steps(block_q, block_k) for b in self.bands)
-        tile_flops = 4 * block_q * block_k  # qk + pv MACs per (i,j) pair *2
-        useful = int(self.pattern.mask(self.n).sum())
-        executed = nq * steps * block_q * block_k
-        return dict(
-            q_blocks=nq, kv_steps_per_q_block=steps,
-            executed_pairs=executed, useful_pairs=useful,
-            utilization=useful / max(executed, 1), tile_flops=tile_flops,
-        )
+        """Tile-level work accounting (drives the utilization benchmark).
+
+        Counts what the fused plan actually executes — overlapping bands'
+        shared KV tiles are visited once, not once per band (the old
+        per-band accounting over-counted exactly those)."""
+        p = self.plan(block_q, block_k)
+        return p.stats()
 
 
 # ---------------------------------------------------------------------- #
@@ -205,3 +254,156 @@ def schedule(pattern: HybridSparsePattern, n: int) -> BandSchedule:
                         n_global=pattern.n_global,
                         global_rows=pattern.global_rows,
                         causal=pattern.causal, pattern=pattern)
+
+
+# ---------------------------------------------------------------------- #
+# ExecutionPlan IR
+# ---------------------------------------------------------------------- #
+@dataclasses.dataclass(frozen=True, eq=False)
+class ExecutionPlan:
+    """Flat per-query-block step tables: what one fused pass executes.
+
+    Row ``i`` of the tables lists the KV tiles query block ``i`` visits, in
+    ascending tile order, each tile exactly once:
+
+    * ``kv_blocks[i, s]`` — KV tile index of step ``s`` (0 for padding steps);
+    * ``flags[i, s]``     — STEP_WINDOW / STEP_GLOBAL bitmask (0 = padding
+      no-op: every mask term evaluates False);
+    * ``band_set_ids[i, s]`` — index into ``band_sets``, the distinct subsets
+      of schedule bands covering a visit (-1 for padding). Purely
+      introspective: since a (q_block, kv_tile) pair is visited once, the
+      window mask needs no band restriction — the union mask is exact.
+
+    Rows are right-padded to ``max_steps`` so the table is rectangular (the
+    kernel grid's sequential dimension). All arrays are static numpy; the
+    plan hashes on (schedule, block_q, block_k) for jit static-arg use.
+    """
+    sched: BandSchedule
+    block_q: int
+    block_k: int
+    n_pad: int                # padded working length (tile-grid aligned)
+    nq: int                   # query blocks
+    nkb: int                  # KV tiles
+    max_steps: int            # table width = kernel grid steps
+    kv_blocks: np.ndarray     # (nq, max_steps) int32
+    flags: np.ndarray         # (nq, max_steps) int32
+    band_set_ids: np.ndarray  # (nq, max_steps) int32
+    band_sets: Tuple[Tuple[int, ...], ...]
+    num_steps: np.ndarray     # (nq,) int32 — real (non-padding) steps
+
+    def __hash__(self):
+        return hash((self.sched, self.block_q, self.block_k))
+
+    def __eq__(self, other):
+        return (isinstance(other, ExecutionPlan)
+                and self.sched == other.sched
+                and self.block_q == other.block_q
+                and self.block_k == other.block_k)
+
+    # ------------------------------------------------------------------ #
+    def positions_padded(self) -> np.ndarray:
+        """Original position per padded working slot (PAD_SENTINEL beyond)."""
+        pos = np.full(self.n_pad, BIG, dtype=np.int32)
+        pos[: self.sched.n_work] = self.sched.positions()
+        return pos
+
+    def step_mask(self, pos_i, pos_j, flags):
+        return self.sched.step_mask(pos_i, pos_j, flags)
+
+    # ------------------------------------------------------------------ #
+    def stats(self) -> dict:
+        """Plan-level work accounting, fused vs the per-band-launch walk."""
+        executed_tiles = int(self.num_steps.sum())
+        executed_pairs = executed_tiles * self.block_q * self.block_k
+        useful = int(self.sched.pattern.mask(self.sched.n).sum())
+        g = self.sched.n_global
+        # What the retired one-launch-per-band path executed: every band
+        # walks its full (unclipped) tile span per query block, plus the
+        # global-column pass — shared tiles re-fetched once per band.
+        per_band_steps = sum(b.kv_steps(self.block_q, self.block_k)
+                             for b in self.sched.bands)
+        if g > 0:
+            per_band_steps += -(-g // self.block_k)
+        per_band_tiles = self.nq * per_band_steps
+        per_band_launches = len(self.sched.bands)
+        return dict(
+            q_blocks=self.nq,
+            kv_steps_per_q_block=self.max_steps,
+            executed_pairs=executed_pairs,
+            useful_pairs=useful,
+            utilization=useful / max(executed_pairs, 1),
+            tile_flops=4 * self.block_q * self.block_k,
+            executed_tiles=executed_tiles,
+            per_band_tiles=per_band_tiles,
+            per_band_launches=per_band_launches,
+            launches=1,
+            band_sets=len(self.band_sets),
+        )
+
+
+@functools.lru_cache(maxsize=256)
+def build_plan(sched: BandSchedule, block_q: int,
+               block_k: int) -> ExecutionPlan:
+    """Lower a band schedule into the deduplicated ExecutionPlan.
+
+    Correctness of the dedup (why one visit per tile suffices): every
+    attended pair (i, j) of the windowed part has a working-space offset
+    inside some band, so its KV tile lies inside that band's walk for i's
+    query block; every global pair's tile holds a global key and is added to
+    the visit set explicitly (wherever reordering scattered it). Since each
+    pair lives in exactly one KV tile and each tile is visited at most once,
+    applying the union mask (window | global-column) at the visit counts
+    each pair exactly once — no cross-band double counting, no misses.
+    """
+    n_pad = _round_up(sched.n_work, max(block_q, block_k))
+    nq = n_pad // block_q
+    nkb = n_pad // block_k
+    pos = np.full(n_pad, BIG, dtype=np.int32)
+    pos[: sched.n_work] = sched.positions()
+
+    g = sched.n_global
+    if g > 0:
+        # Tiles holding global keys — a contiguous prefix in the identity
+        # layout, scattered across residue groups after dilation reordering.
+        gtiles = set(np.nonzero(
+            (pos.reshape(nkb, block_k) < g).any(axis=1))[0].tolist())
+    else:
+        gtiles = set()
+
+    band_set_index: dict = {}
+    band_sets: list = []
+    rows = []
+    for i in range(nq):
+        cover: dict = {}
+        for bi, band in enumerate(sched.bands):
+            s0 = band.kv_start_block(i, block_q, block_k)
+            for t in range(s0, s0 + band.kv_steps(block_q, block_k)):
+                if 0 <= t < nkb:
+                    cover.setdefault(t, []).append(bi)
+        row = []
+        for t in sorted(set(cover) | gtiles):
+            bset = tuple(cover.get(t, ()))
+            fl = (STEP_WINDOW if bset else 0) | (STEP_GLOBAL
+                                                 if t in gtiles else 0)
+            if bset not in band_set_index:
+                band_set_index[bset] = len(band_sets)
+                band_sets.append(bset)
+            row.append((t, fl, band_set_index[bset]))
+        rows.append(row)
+
+    max_steps = max(1, max(len(r) for r in rows))
+    kv_blocks = np.zeros((nq, max_steps), dtype=np.int32)
+    flags = np.zeros((nq, max_steps), dtype=np.int32)
+    band_set_ids = np.full((nq, max_steps), -1, dtype=np.int32)
+    num_steps = np.asarray([len(r) for r in rows], dtype=np.int32)
+    for i, row in enumerate(rows):
+        for s, (t, fl, sid) in enumerate(row):
+            kv_blocks[i, s] = t
+            flags[i, s] = fl
+            band_set_ids[i, s] = sid
+
+    return ExecutionPlan(
+        sched=sched, block_q=block_q, block_k=block_k, n_pad=n_pad, nq=nq,
+        nkb=nkb, max_steps=max_steps, kv_blocks=kv_blocks, flags=flags,
+        band_set_ids=band_set_ids, band_sets=tuple(band_sets),
+        num_steps=num_steps)

@@ -1,0 +1,10 @@
+"""Distributed substrate: logical-axis sharding rules and gradient
+compression.
+
+* :mod:`repro.dist.sharding` — named logical axes ("batch", "seq", "heads",
+  ...) resolved to mesh axes through per-cell rule dicts, plus path-regex
+  parameter shardings. Model code only ever names logical axes
+  (:func:`repro.dist.sharding.constrain`); the launcher decides the mapping.
+* :mod:`repro.dist.compression` — int8 gradient compression with error
+  feedback for cross-pod all-reduce.
+"""

@@ -1,0 +1,59 @@
+"""int8 gradient compression with error feedback (cross-pod all-reduce).
+
+The pod axis of the production mesh crosses the DCN boundary, where gradient
+all-reduce bytes dominate. Symmetric per-tensor int8 quantization cuts them
+4x; error feedback (Karimireddy et al., 2019) carries the quantization
+residual into the next step so the *accumulated* update stays unbiased
+(property-tested in tests/test_substrates.py).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _q8(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Symmetric per-tensor int8 quantization: returns (q, scale)."""
+    s = jnp.max(jnp.abs(x)) / 127.0
+    s = jnp.where(s == 0.0, 1.0, s)
+    q = jnp.clip(jnp.round(x / s), -127, 127).astype(jnp.int8)
+    return q, s.astype(jnp.float32)
+
+
+def _dq(q: jax.Array, s: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * s
+
+
+def compress_decompress(grads, ef_state=None):
+    """Quantize-dequantize every leaf with error feedback.
+
+    ``ef_state`` carries each leaf's residual (None on the first step).
+    Returns (grads', ef_state') where grads' is what the (compressed)
+    all-reduce would deliver and ef_state' the residual to re-inject.
+    """
+    if ef_state is None:
+        ef_state = jax.tree.map(lambda g: jnp.zeros_like(g, jnp.float32),
+                                grads)
+
+    def one(g, ef):
+        e = g.astype(jnp.float32) + ef
+        q, s = _q8(e)
+        out = _dq(q, s)
+        return out.astype(g.dtype), e - out
+
+    flat = jax.tree.map(one, grads, ef_state)
+    out = jax.tree.map(lambda t: t[0], flat,
+                       is_leaf=lambda t: isinstance(t, tuple))
+    ef = jax.tree.map(lambda t: t[1], flat,
+                      is_leaf=lambda t: isinstance(t, tuple))
+    return out, ef
+
+
+def compressed_psum(x: jax.Array, axis: str) -> jax.Array:
+    """psum of int8-quantized operands (the wire format of the cross-pod
+    all-reduce). Each participant quantizes locally; the sum happens on the
+    dequantized values (bandwidth model: int8 + one f32 scale per tensor)."""
+    q, s = _q8(x)
+    return jax.lax.psum(_dq(q, s), axis)

@@ -1,0 +1,203 @@
+"""Logical-axis sharding: rules, constraints, and param-path shardings.
+
+Model code names *logical* axes only — ``constrain(x, "batch", "seq",
+"embed")`` — and the launcher installs a rules dict mapping each logical
+axis to zero or more mesh axes (``{"batch": ("pod", "data"), ...}``) via the
+:func:`axis_rules` context manager. Outside any rules context (unit tests,
+single-device runs) every constraint is the identity, so pure model code
+never needs a mesh.
+
+Parameter shardings are derived from the parameter tree *paths* — key names
+in :mod:`repro.models.layers` are load-bearing (``wq``, ``w_in``, ``embed/w``
+...) and matched by the regex table below.
+"""
+from __future__ import annotations
+
+import contextlib
+import math
+import re
+import threading
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# Default mapping of logical axes -> mesh axes for the production meshes
+# (pod, data, model). Cells override per shape via launch.specs.cell_rules.
+DEFAULT_RULES: Dict[str, Any] = {
+    "batch": ("pod", "data"),
+    "seq": None,            # turned on for long-context cells (SP)
+    "cache_seq": None,
+    "embed": None,
+    "ffn": ("model",),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "head_dim": None,
+    "vocab": ("model",),
+    "experts": ("model",),
+    "expert_cap": None,
+    "fsdp": ("data",),      # fallback axis for otherwise-replicated 2-D params
+}
+
+_CTX = threading.local()
+
+
+def _stack():
+    if not hasattr(_CTX, "stack"):
+        _CTX.stack = []
+    return _CTX.stack
+
+
+@contextlib.contextmanager
+def axis_rules(rules: Dict[str, Any], mesh: Optional[Mesh] = None):
+    """Install ``rules`` (and optionally a mesh) for the dynamic extent."""
+    _stack().append((dict(rules), mesh))
+    try:
+        yield
+    finally:
+        _stack().pop()
+
+
+def current_rules() -> Optional[Dict[str, Any]]:
+    s = _stack()
+    return s[-1][0] if s else None
+
+
+def _ambient_mesh() -> Optional[Mesh]:
+    """Mesh from axis_rules(..., mesh) or the ``with mesh:`` context."""
+    s = _stack()
+    if s and s[-1][1] is not None:
+        return s[-1][1]
+    try:
+        from jax.interpreters import pxla
+        m = pxla.thread_resources.env.physical_mesh
+        if m is not None and not m.empty:
+            return m
+    except Exception:
+        pass
+    return None
+
+
+def resolve(*logical) -> P:
+    """PartitionSpec for logical axis names under the current rules."""
+    rules = current_rules() or DEFAULT_RULES
+    entries = []
+    for name in logical:
+        e = rules.get(name) if name else None
+        if isinstance(e, tuple) and len(e) == 0:
+            e = None
+        entries.append(e)
+    return P(*entries)
+
+
+def _axes_product(mesh: Mesh, entry) -> int:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    axes = (entry if isinstance(entry, tuple)
+            else (entry,) if entry else ())
+    return math.prod(sizes.get(a, 1) for a in axes)
+
+
+def _mesh_clean(mesh: Mesh, spec: P, shape) -> P:
+    """Drop axes missing from the mesh, not dividing their dimension, or
+    already consumed by an earlier dimension (a mesh axis may shard at most
+    one positional dimension)."""
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    out = []
+    used: set = set()
+    for e, dim in zip(entries, shape):
+        axes = (e if isinstance(e, tuple) else (e,) if e else ())
+        axes = tuple(a for a in axes
+                     if a in mesh.axis_names and a not in used)
+        p = _axes_product(mesh, axes)
+        if axes and p > 1 and dim % p == 0:
+            used.update(axes)
+            out.append(axes)
+        else:
+            out.append(None)
+    return P(*out)
+
+
+def constrain(x: jax.Array, *logical) -> jax.Array:
+    """Sharding constraint by logical axis names; identity outside a rules
+    context or on a trivial mesh. Safe inside any jit/grad transform."""
+    rules = current_rules()
+    if rules is None:
+        return x
+    mesh = _ambient_mesh()
+    if mesh is None or mesh.empty or mesh.devices.size == 1:
+        return x
+    spec = _mesh_clean(mesh, resolve(*logical), x.shape)
+    if all(e is None for e in spec):
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def input_sharding(mesh: Mesh, rules: Dict[str, Any], *logical):
+    """NamedSharding for an input by logical names (none -> replicated)."""
+    with axis_rules(rules):
+        spec = resolve(*logical)
+    return NamedSharding(mesh, P(*spec))
+
+
+# ------------------------ parameter shardings --------------------------- #
+# Path regexes over '/'-joined param tree keys -> logical axes per dim.
+# First match wins; unmatched leaves replicate (always correct) unless the
+# fsdp fallback applies.
+PARAM_RULES: Tuple[Tuple[str, Tuple[Optional[str], ...]], ...] = (
+    (r"(^|/)(embed|lm_head)/w$", ("vocab", "embed")),
+    (r"(^|/)wq$", ("embed", "heads")),
+    (r"(^|/)w[kv]$", ("embed", "kv_heads")),
+    (r"(^|/)wo$", ("heads", "embed")),
+    (r"(^|/)(w_in|w_gate|w_gate_branch)$", ("embed", "ffn")),
+    (r"(^|/)w_out$", ("ffn", "embed")),
+    (r"(^|/)router$", ("embed", "experts")),
+    (r"(^|/)(scale|bias)$", (None,)),
+)
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def logical_axes_for(path: str, ndim: int) -> Tuple[Optional[str], ...]:
+    for pat, axes in PARAM_RULES:
+        if re.search(pat, path):
+            # Leading (stacked-layer / expert) dims stay unsharded unless the
+            # leaf really is the expert-stationary 3-D tensor.
+            if ndim == len(axes) + 1:
+                lead = ("experts",) if "w_" in path.rsplit("/", 1)[-1] \
+                    and ndim == 3 else (None,)
+                return lead + axes
+            if ndim >= len(axes):
+                return (None,) * (ndim - len(axes)) + axes
+            return axes[:ndim]
+    return (None,) * ndim
+
+
+def param_shardings(tree, mesh: Mesh, rules: Dict[str, Any]):
+    """NamedSharding tree for a parameter tree by path-regex rules."""
+
+    def one(path, leaf):
+        logical = logical_axes_for(_path_str(path), len(leaf.shape))
+        with axis_rules(rules):
+            spec = resolve(*logical)
+        spec = _mesh_clean(mesh, spec, leaf.shape)
+        # FSDP fallback: shard the largest dim of otherwise-replicated
+        # >=2-D params over the fsdp axis when it divides.
+        fsdp = rules.get("fsdp")
+        if fsdp and len(leaf.shape) >= 2 and all(e is None for e in spec):
+            dim = max(range(len(leaf.shape)), key=lambda i: leaf.shape[i])
+            cand = P(*[fsdp if i == dim else None
+                       for i in range(len(leaf.shape))])
+            spec = _mesh_clean(mesh, cand, leaf.shape)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(one, tree)

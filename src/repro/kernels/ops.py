@@ -1,17 +1,17 @@
-"""jit'd wrapper around the SALO Pallas kernel.
+"""jit'd wrapper around the SALO Pallas kernel — ONE launch per forward.
 
-Composes the full hybrid pattern from kernel calls, exactly as the paper's
-data scheduler drives the accelerator:
+The lowering pipeline (core/scheduler.py): pattern -> BandSchedule ->
+ExecutionPlan. This wrapper only does what a host must:
 
 1. data reordering (dilation) on the host side of the kernel,
-2. one kernel launch per band; the global column fused into the first launch
-   (non-reordered patterns) or computed as an extra partial (reordered —
-   global tokens tap the ORIGINAL stream, paper §5.2),
-3. partials merged with `core.renorm.merge` (paper Eq. 2),
-4. global rows (global queries attend everything) as one dense flash pass,
+2. padding to the plan's tile grid,
+3. ONE ``pallas_call`` executing the plan's step tables — every band and the
+   global column fused, exactly as the paper's scheduler drives the array,
+4. global rows (global queries attend everything) as a tiny g-row dense
+   epilogue (not a kernel launch),
 5. custom_vjp: backward = autodiff of the algorithmic twin
-   (`core.blockwise`), which recomputes activations flash-style (no O(n^2)
-   residuals live).
+   (`core.blockwise`), which walks the SAME plan and recomputes activations
+   flash-style (no O(n^2) residuals live).
 """
 from __future__ import annotations
 
@@ -20,19 +20,11 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.core import renorm
 from repro.core.blockwise import blockwise_attention, _global_rows
 from repro.core.patterns import HybridSparsePattern
-from repro.core.scheduler import BIG, _round_up, schedule
-from repro.kernels.salo_attention import salo_band_attention
-
-
-def _to_state(out, m, l):
-    """(normalized out, m, l) -> mergeable PartialState (acc = out * l)."""
-    return renorm.PartialState(acc=out.astype(jnp.float32) * l[..., None],
-                               m=m, l=l)
+from repro.core.scheduler import schedule
+from repro.kernels.salo_attention import salo_plan_attention
 
 
 @functools.partial(jax.custom_vjp,
@@ -50,6 +42,7 @@ def _forward(q, k, v, pattern, block_q, block_k, scale, interpret):
     B, N, D = q.shape
     scale_ = (D ** -0.5) if scale is None else scale
     sched = schedule(pattern, N)
+    plan = sched.plan(block_q, block_k)
     out_dtype = q.dtype
 
     # --- data reordering (paper §4.2) ----------------------------------- #
@@ -63,41 +56,19 @@ def _forward(q, k, v, pattern, block_q, block_k, scale, interpret):
     else:
         qw, kw, vw = q, k, v
 
-    n_pad = _round_up(sched.n_work, max(block_q, block_k))
-    pad = n_pad - qw.shape[1]
+    pad = plan.n_pad - qw.shape[1]
     if pad:
         qw = jnp.pad(qw, ((0, 0), (0, pad), (0, 0)))
         kw = jnp.pad(kw, ((0, 0), (0, pad), (0, 0)))
         vw = jnp.pad(vw, ((0, 0), (0, pad), (0, 0)))
-    pos = np.full(n_pad, BIG, dtype=np.int32)
-    pos[: sched.n_work] = sched.positions()
-    pos = jnp.asarray(pos)
+    pos = jnp.asarray(plan.positions_padded())
 
-    # --- one kernel launch per band; global fused into launch #0 -------- #
-    fuse_global = sched.n_global > 0 and not sched.reordered
-    state = None
-    for bi, band in enumerate(sched.bands):
-        out_b, m_b, l_b = salo_band_attention(
-            qw, kw, vw, pos, sched=sched, band=band, block_q=block_q,
-            block_k=block_k, fuse_global=(fuse_global and bi == 0),
-            scale=scale_, interpret=interpret)
-        st = _to_state(out_b, m_b, l_b)
-        state = st if state is None else renorm.merge(state, st)
-
-    # --- reordered patterns: global column taps the ORIGINAL stream ----- #
-    if sched.n_global > 0 and sched.reordered:
-        from repro.core.blockwise import _global_col_partial
-        nq = n_pad // block_q
-        q_blk = qw.reshape(B, nq, block_q, D)
-        gst = renorm.empty_state((B, nq, block_q), D)
-        gst = _global_col_partial(gst, q_blk, k, v, pos, sched, block_k,
-                                  scale_)
-        gst = renorm.PartialState(acc=gst.acc.reshape(B, n_pad, D),
-                                  m=gst.m.reshape(B, n_pad),
-                                  l=gst.l.reshape(B, n_pad))
-        state = renorm.merge(state, gst)
-
-    out = renorm.finalize(state, out_dtype)
+    # --- the single table-driven launch --------------------------------- #
+    # (m, l) are emitted for cross-device merges; the full pattern is one
+    # launch, so `out` is already the normalized result.
+    out, _m, _l = salo_plan_attention(qw, kw, vw, pos, plan=plan,
+                                      scale=scale_, interpret=interpret)
+    out = out.astype(out_dtype)
 
     if sched.reordered:
         inv = jnp.asarray(sched.inverse_perm())
@@ -118,8 +89,8 @@ def _fwd(q, k, v, pattern, block_q, block_k, scale, interpret):
 
 def _bwd(pattern, block_q, block_k, scale, interpret, res, g):
     q, k, v = res
-    # Backward through the algorithmic twin: identical math, autodiffable,
-    # flash-style memory (recompute, no n^2 residuals).
+    # Backward through the algorithmic twin: identical plan walk,
+    # autodiffable, flash-style memory (recompute, no n^2 residuals).
     _, vjp = jax.vjp(
         lambda q_, k_, v_: blockwise_attention(
             q_, k_, v_, pattern, block_q=block_q, block_k=block_k,

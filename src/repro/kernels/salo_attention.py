@@ -1,34 +1,34 @@
-"""SALO banded attention as a Pallas TPU kernel.
+"""SALO hybrid sparse attention as ONE table-driven Pallas TPU kernel.
 
-The TPU-native incarnation of the paper's spatial accelerator (DESIGN.md §2):
+The TPU-native incarnation of the paper's spatial accelerator (DESIGN.md §2),
+driven by the :class:`repro.core.scheduler.ExecutionPlan` IR:
 
 * The MXU plays the 32x32 PE systolic array: each grid step multiplies a
   resident (block_q, D) query tile against a streamed (block_k, D) K tile and
   the matching V tile — stage 1 and stage 5 of the paper's 5-stage PE pipeline
   collapse into two MXU contractions.
-* The paper's diagonal K/V streaming (data reuse between successive queries)
-  becomes the banded KV walk: for query block ``i`` only the KV tiles
-  intersecting the window band are fetched HBM->VMEM. Work per query block is
-  O(band), not O(n) — linear total complexity.
+* The paper's data scheduler becomes the plan's **step table**, streamed in
+  via scalar prefetch (``PrefetchScalarGridSpec``): step ``s`` of query block
+  ``i`` fetches KV tile ``kv_blocks[i, s]`` HBM->VMEM. The table is the union
+  of every band's walk plus the global-key tiles, deduplicated — overlapping
+  bands (ViL's 15) share one visit per tile, and global attention rides the
+  same stream ("simultaneously with the same input vectors", paper §5.2)
+  instead of a separate pass. One ``pallas_call`` per forward, period.
 * The paper's window splitting + weighted-sum module (Eq. 2) is the online
-  softmax accumulator in VMEM scratch: (acc, m, l) updated per KV tile.
-* The paper's global PE column (every query attends the global-token keys) is
-  fused into the same grid as ``grid_global`` leading steps that walk the
-  global key prefix of the SAME K/V stream — no extra HBM pass, mirroring
-  SALO's "compute global attention simultaneously with the same input
-  vectors". (Global *rows* — global queries attending everything — are one
-  extra dense flash pass over the same stream, done by ops.py.)
+  softmax accumulator in VMEM scratch: (acc, m, l) updated once per visited
+  tile — no per-band partials, no inter-launch merges.
+* Masks come from *original token positions* streamed as int32 tiles plus the
+  plan's per-step flags, so dilation-reordered inputs, 2-D grids, global
+  columns, and padding are all the same code path (core/scheduler.py).
+  (Global *rows* — global queries attending everything — are a tiny dense
+  epilogue over g rows in ops.py, not a kernel launch.)
 
-The kernel emits the *partial state* (normalized out, m, l) so multi-band
-patterns (ViL's 15 bands) and cross-device sequence parallelism can merge
-kernels' outputs with `core.renorm.merge` — exactly the paper's scheme.
+Grid: ``(B, num_q_blocks, plan.max_steps)``; the last dimension is
+sequential ("arbitrary"), the first two parallel. Padding steps (flags == 0)
+mask to nothing and leave the accumulator untouched.
 
-Grid: ``(B, num_q_blocks, grid_global + band_steps)``; the last dimension is
-sequential ("arbitrary"), the first two parallel.
-
-Masks are evaluated from *original token positions* streamed in as int32
-tiles, so dilation-reordered inputs and padding are handled uniformly
-(see core/scheduler.py).
+The kernel emits the *partial state* (normalized out, m, l) so cross-device
+sequence parallelism can still merge outputs with `core.renorm.merge`.
 """
 from __future__ import annotations
 
@@ -40,19 +40,21 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.core.scheduler import BandSchedule, Band
+from repro.compat import tpu_compiler_params
+from repro.core.scheduler import ExecutionPlan, STEP_GLOBAL, STEP_WINDOW
 
 NEG_INF = -1e30
 LANES = 128  # TPU vector lane count; m/l scratch is lane-replicated
 
 
-def _kernel(pos_q_ref, pos_k_ref, q_ref, k_ref, v_ref,      # inputs
-            out_ref, m_ref, l_ref,                          # outputs
-            acc_ref, m_scr, l_scr,                          # VMEM scratch
-            *, sched: BandSchedule, band: Band, block_q: int, block_k: int,
-            grid_global: int, steps: int, nkb: int, scale: float):
+def _kernel(kvt_ref, flg_ref,                           # scalar prefetch
+            pos_q_ref, pos_k_ref, q_ref, k_ref, v_ref,  # inputs
+            out_ref, m_ref, l_ref,                      # outputs
+            acc_ref, m_scr, l_scr,                      # VMEM scratch
+            *, plan: ExecutionPlan, scale: float):
     i = pl.program_id(1)
     s = pl.program_id(2)
+    steps = plan.max_steps
 
     @pl.when(s == 0)
     def _init():
@@ -60,35 +62,17 @@ def _kernel(pos_q_ref, pos_k_ref, q_ref, k_ref, v_ref,      # inputs
         m_scr[...] = jnp.full_like(m_scr, NEG_INF)
         l_scr[...] = jnp.zeros_like(l_scr)
 
-    # ---- recompute the (signed, unclamped) KV tile this step addresses ---- #
-    s0 = (i * block_q + band.lo) // block_k          # first band tile (signed)
-    is_band = s >= grid_global
-    blk = jnp.where(is_band, s0 + s - grid_global, s)
-    in_range = (blk >= 0) & (blk < nkb)
-
     q = q_ref[0]                                     # (Bq, D)
     k = k_ref[0]                                     # (Bk, D)
     scores = jax.lax.dot_general(
         q, k, (((1,), (1,)), ((), ())),
         preferred_element_type=jnp.float32) * scale  # (Bq, Bk)
 
-    # ---- masks from original positions (dilation/2-D/causal/padding) ---- #
+    # ---- plan mask: window | global column, gated by the step flags ---- #
+    fl = flg_ref[i * steps + s]                      # int32 scalar
     pos_q = pos_q_ref[0]                             # (Bq,) int32
     pos_k = pos_k_ref[0]                             # (Bk,) int32
-    pi = pos_q[:, None]
-    pj = pos_k[None, :]
-    wmask = sched.window_mask(pi, pj)
-    # Working-space band restriction (prevents double-count across bands).
-    wi = i * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
-    wj = blk * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
-    rel_w = wj - wi
-    band_mask = wmask & (rel_w >= band.lo) & (rel_w <= band.hi)
-    if grid_global > 0:
-        gmask = sched.global_col_mask(pi, pj)
-        mask = jnp.where(is_band, band_mask, gmask)
-    else:
-        mask = band_mask
-    mask = mask & in_range
+    mask = plan.step_mask(pos_q[:, None], pos_k[None, :], fl)
 
     scores = jnp.where(mask, scores, NEG_INF)
 
@@ -119,72 +103,72 @@ def _kernel(pos_q_ref, pos_k_ref, q_ref, k_ref, v_ref,      # inputs
         l_ref[0] = l_scr[...][:, 0]
 
 
-@functools.partial(jax.jit, static_argnames=(
-    "sched", "band", "block_q", "block_k", "fuse_global", "scale",
-    "interpret"))
-def salo_band_attention(q: jax.Array, k: jax.Array, v: jax.Array,
-                        pos: jax.Array, *, sched: BandSchedule, band: Band,
-                        block_q: int = 128, block_k: int = 128,
-                        fuse_global: bool = False,
+@functools.partial(jax.jit, static_argnames=("plan", "scale", "interpret"))
+def salo_plan_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                        pos: jax.Array, *, plan: ExecutionPlan,
                         scale: Optional[float] = None,
                         interpret: bool = False):
-    """One band (+ optionally fused global column) on padded working-space
-    inputs. q/k/v: (B, n_pad, D); pos: (n_pad,) original positions.
+    """The whole hybrid pattern (all bands + global column) in ONE launch.
 
-    Returns (out, m, l): normalized output and softmax stats — a mergeable
-    partial (out*l rebuilds `renorm.PartialState.acc`).
+    q/k/v: (B, n_pad, D) padded working-space inputs; pos: (n_pad,) original
+    positions. Returns (out, m, l): normalized output and softmax stats — a
+    mergeable partial (out*l rebuilds `renorm.PartialState.acc`).
     """
     B, n_pad, D = q.shape
-    assert n_pad % block_q == 0 and n_pad % block_k == 0
+    assert n_pad == plan.n_pad, (n_pad, plan.n_pad)
+    block_q, block_k = plan.block_q, plan.block_k
     scale = (D ** -0.5) if scale is None else scale
-    nq = n_pad // block_q
-    nkb = n_pad // block_k
+    nq, nkb, steps = plan.nq, plan.nkb, plan.max_steps
 
-    g = sched.n_global if fuse_global else 0
-    grid_global = -(-g // block_k) if g > 0 else 0    # ceil
-    steps = grid_global + band.kv_steps(block_q, block_k)
-
+    kvt = jnp.asarray(plan.kv_blocks.reshape(-1))    # (nq*steps,) int32
+    flg = jnp.asarray(plan.flags.reshape(-1))
     pos_q = pos.reshape(nq, block_q)
     pos_k = pos.reshape(nkb, block_k)
 
-    def kv_idx(b, i, s):
-        s0 = (i * block_q + band.lo) // block_k
-        blk = jnp.where(s >= grid_global, s0 + s - grid_global, s)
-        return (b, jnp.clip(blk, 0, nkb - 1), 0)
+    def kv_idx(b, i, s, kvt_ref, flg_ref):
+        return (b, kvt_ref[i * steps + s], 0)
 
-    kern = functools.partial(
-        _kernel, sched=sched, band=band, block_q=block_q, block_k=block_k,
-        grid_global=grid_global, steps=steps, nkb=nkb, scale=scale)
-
-    out, m, l = pl.pallas_call(
-        kern,
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
         grid=(B, nq, steps),
         in_specs=[
-            pl.BlockSpec((1, block_q), lambda b, i, s: (i, 0)),      # pos_q
+            pl.BlockSpec((1, block_q),
+                         lambda b, i, s, kvt_ref, flg_ref: (i, 0)),  # pos_q
             pl.BlockSpec((1, block_k),
-                         lambda b, i, s: (kv_idx(b, i, s)[1], 0)),   # pos_k
-            pl.BlockSpec((1, block_q, D), lambda b, i, s: (b, i, 0)),  # q
-            pl.BlockSpec((1, block_k, D), kv_idx),                     # k
-            pl.BlockSpec((1, block_k, D), kv_idx),                     # v
+                         lambda b, i, s, kvt_ref, flg_ref:
+                         (kvt_ref[i * steps + s], 0)),               # pos_k
+            pl.BlockSpec((1, block_q, D),
+                         lambda b, i, s, kvt_ref, flg_ref: (b, i, 0)),  # q
+            pl.BlockSpec((1, block_k, D), kv_idx),                      # k
+            pl.BlockSpec((1, block_k, D), kv_idx),                      # v
         ],
         out_specs=[
-            pl.BlockSpec((1, block_q, D), lambda b, i, s: (b, i, 0)),
-            pl.BlockSpec((1, block_q), lambda b, i, s: (b, i)),
-            pl.BlockSpec((1, block_q), lambda b, i, s: (b, i)),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((B, n_pad, D), q.dtype),
-            jax.ShapeDtypeStruct((B, n_pad), jnp.float32),
-            jax.ShapeDtypeStruct((B, n_pad), jnp.float32),
+            pl.BlockSpec((1, block_q, D),
+                         lambda b, i, s, kvt_ref, flg_ref: (b, i, 0)),
+            pl.BlockSpec((1, block_q),
+                         lambda b, i, s, kvt_ref, flg_ref: (b, i)),
+            pl.BlockSpec((1, block_q),
+                         lambda b, i, s, kvt_ref, flg_ref: (b, i)),
         ],
         scratch_shapes=[
             pltpu.VMEM((block_q, D), jnp.float32),      # acc
             pltpu.VMEM((block_q, LANES), jnp.float32),  # m (lane-replicated)
             pltpu.VMEM((block_q, LANES), jnp.float32),  # l
         ],
-        compiler_params=pltpu.CompilerParams(
+    )
+
+    kern = functools.partial(_kernel, plan=plan, scale=scale)
+    out, m, l = pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((B, n_pad, D), q.dtype),
+            jax.ShapeDtypeStruct((B, n_pad), jnp.float32),
+            jax.ShapeDtypeStruct((B, n_pad), jnp.float32),
+        ],
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
-        name=f"salo_band_{band.lo}_{band.hi}",
-    )(pos_q, pos_k, q, k, v)
+        name="salo_plan_attention",
+    )(kvt, flg, pos_q, pos_k, q, k, v)
     return out, m, l

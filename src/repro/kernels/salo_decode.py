@@ -20,7 +20,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.compat import tpu_compiler_params
 from repro.core.patterns import HybridSparsePattern
+from repro.core.scheduler import PAD_SENTINEL
 
 NEG_INF = -1e30
 LANES = 128
@@ -93,7 +95,7 @@ def salo_decode(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
         k_cache = jnp.pad(k_cache, padc)
         v_cache = jnp.pad(v_cache, padc)
         positions = jnp.pad(positions, (0, S_pad - S),
-                            constant_values=2 ** 30 - 2 ** 20)
+                            constant_values=PAD_SENTINEL)
     steps = S_pad // block_s
     qg = q.reshape(B, Hkv, rep, hd)
     pos2d = positions.reshape(steps, block_s)
@@ -118,7 +120,7 @@ def salo_decode(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
             pltpu.VMEM((rep, LANES), jnp.float32),
             pltpu.VMEM((rep, LANES), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
         name="salo_decode",

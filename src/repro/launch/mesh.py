@@ -12,19 +12,19 @@ from __future__ import annotations
 
 import jax
 
+from repro.compat import make_mesh, _axis_type_auto
+
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes, axis_types=_axis_type_auto(len(axes)))
 
 
 def make_host_mesh(data: int = 1, model: int = 1):
     """Small mesh over whatever devices exist (tests, examples)."""
-    return jax.make_mesh(
-        (data, model), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh((data, model), ("data", "model"),
+                     axis_types=_axis_type_auto(2))
 
 
 # TPU v5e hardware constants (roofline denominators; see EXPERIMENTS.md).

@@ -20,6 +20,7 @@ from repro.configs.base import ModelConfig, SALOConfig
 from repro.core import (HybridSparsePattern, causal_sliding_window,
                         hybrid_attention, hybrid_decode_attention, longformer,
                         full)
+from repro.core.scheduler import PAD_SENTINEL
 from repro.dist.sharding import constrain
 
 
@@ -182,9 +183,9 @@ def attn_decode(p, x_t, cache_k, cache_v, t, cfg: ModelConfig,
         j = jnp.arange(S_slots, dtype=jnp.int32)
         pos_ring = tt - ((tt - j) % w_)
         pos = jnp.where(j < g_, j, pos_ring)
-        # unwritten ring slots (pos < g) mask out via a huge sentinel
+        # unwritten ring slots (pos < g) mask out via the padding sentinel
         cache_positions = jnp.where((j >= g_) & (pos < g_),
-                                    jnp.int32(2 ** 30 - 2 ** 20), pos)
+                                    jnp.int32(PAD_SENTINEL), pos)
     elif cache_positions is None:  # full cache: slot == position
         cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k, t, axis=1)
         cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v, t, axis=1)

@@ -165,6 +165,8 @@ def analyze(cost: dict, hlo_text: str, n_chips: int,
     from repro.roofline.hlo_analyzer import analyze_hlo
 
     hc = analyze_hlo(hlo_text, n_chips)
+    if isinstance(cost, (list, tuple)):  # older jax: one dict per device
+        cost = cost[0] if cost else {}
     flops = max(hc.flops, float(cost.get("flops", 0.0)))
     byts = max(hc.bytes, float(cost.get("bytes accessed", 0.0)))
     colls = hc.collectives

@@ -24,6 +24,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.patterns import HybridSparsePattern
+from repro.core.scheduler import PAD_SENTINEL
 
 
 class RingCache(NamedTuple):
@@ -54,7 +55,8 @@ def ring_update(cache: RingCache, k_t: jax.Array, v_t: jax.Array, t,
 
 def ring_positions_mask(cache: RingCache):
     """Positions array for decode_attention: empty slots -> huge (masked)."""
-    return jnp.where(cache.positions < 0, jnp.int32(2 ** 30), cache.positions)
+    return jnp.where(cache.positions < 0, jnp.int32(PAD_SENTINEL),
+                     cache.positions)
 
 
 def bytes_per_layer(batch: int, seq_len: int, n_kv_heads: int, head_dim: int,

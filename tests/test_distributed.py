@@ -34,8 +34,7 @@ def test_sequence_parallel_attention_matches_oracle():
         from repro.core import patterns as P_
         from repro.core.distributed import sequence_parallel_attention
         from repro.kernels.ref import reference_attention
-        mesh = jax.make_mesh((8,), ("data",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = jax.make_mesh((8,), ("data",))
         rng = np.random.default_rng(0)
         B, N, D = 2, 128, 16
         q, k, v = (jnp.asarray(rng.normal(size=(B, N, D)), jnp.float32)
@@ -59,8 +58,7 @@ def test_pjit_train_step_under_mesh():
         from repro.configs.base import ShapeCell
         from repro.launch.specs import build_cell
         import dataclasses
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh = jax.make_mesh((2, 4), ("data", "model"))
         cfg = get_smoke("smollm-135m")
         shape = ShapeCell("t", 64, 4, "train")
         fn, args, in_sh, out_sh, rules = build_cell(cfg, shape, mesh)
@@ -89,8 +87,7 @@ def test_elastic_rescale_8_to_4():
         import tempfile
         from repro.ft import checkpoint as ck
         tree = {"w": jnp.arange(32, dtype=jnp.float32).reshape(8, 4)}
-        mesh8 = jax.make_mesh((8,), ("data",),
-                              axis_types=(jax.sharding.AxisType.Auto,))
+        mesh8 = jax.make_mesh((8,), ("data",))
         sh8 = {"w": NamedSharding(mesh8, P("data", None))}
         placed = jax.device_put(tree, sh8)
         d = tempfile.mkdtemp()
@@ -110,10 +107,9 @@ def test_elastic_rescale_8_to_4():
 
 def test_compressed_psum_across_shards():
     _run("""
-        from jax import shard_map
+        from repro.compat import shard_map
         from repro.dist.compression import compressed_psum
-        mesh = jax.make_mesh((8,), ("data",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = jax.make_mesh((8,), ("data",))
         rng = np.random.default_rng(0)
         g = jnp.asarray(rng.normal(size=(8, 64)), jnp.float32)
         def f(x):
@@ -136,8 +132,7 @@ def test_multipod_mesh_shape():
         from repro.configs import get_smoke
         from repro.configs.base import ShapeCell
         from repro.launch.specs import build_cell
-        mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 3)
+        mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
         cfg = get_smoke("arctic-480b")  # MoE: exercises EP rules too
         shape = ShapeCell("t", 64, 4, "train")
         fn, args, in_sh, out_sh, rules = build_cell(cfg, shape, mesh)
@@ -145,6 +140,9 @@ def test_multipod_mesh_shape():
             lowered = jax.jit(fn, in_shardings=in_sh,
                               out_shardings=out_sh).lower(*args)
             compiled = lowered.compile()
-        assert compiled.cost_analysis().get("flops", 0) > 0
+        cost = compiled.cost_analysis()
+        if isinstance(cost, (list, tuple)):  # older jax: dict per device
+            cost = cost[0]
+        assert cost.get("flops", 0) > 0
         print("MULTIPOD-SMOKE-OK")
     """)

@@ -1,0 +1,279 @@
+"""ExecutionPlan IR tests: exact coverage, real dedup, and ONE launch.
+
+The plan is the single source of truth for the tile walk + masks of both
+engines, so these tests pin down its contract:
+
+  * simulating the step tables + `step_mask` covers EXACTLY `pattern.mask()`
+    (window part — global rows are a dense epilogue): no missed pairs, no
+    double-counted pairs, across 1-D / dilated / 2-D / causal / global;
+  * deduplication is real: ViL's overlapping bands execute strictly fewer
+    tiles than the sum of per-band walks;
+  * the whole hybrid pattern is exactly ONE `pallas_call` per forward;
+  * ViL multi-band pallas_interpret == dense_ref.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import patterns as P
+from repro.core.scheduler import (STEP_GLOBAL, STEP_WINDOW, build_plan,
+                                  schedule)
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+
+# --------------------------- coverage oracle --------------------------- #
+def _simulate_coverage(pat, n, block_q, block_k):
+    """Walk the plan tables exactly as the engines do; count mask hits per
+    ORIGINAL (i, j) pair. Returns the (n, n) count matrix."""
+    sched = schedule(pat, n)
+    plan = build_plan(sched, block_q, block_k)
+    pos = plan.positions_padded()
+    counts = np.zeros((n, n), dtype=int)
+    for i in range(plan.nq):
+        pos_q = pos[i * block_q:(i + 1) * block_q]
+        for s in range(int(plan.num_steps[i])):
+            t = int(plan.kv_blocks[i, s])
+            fl = int(plan.flags[i, s])
+            pos_k = pos[t * block_k:(t + 1) * block_k]
+            mask = np.asarray(plan.step_mask(
+                jnp.asarray(pos_q)[:, None], jnp.asarray(pos_k)[None, :],
+                jnp.int32(fl)))
+            qi, kj = np.nonzero(mask)
+            counts[pos_q[qi], pos_k[kj]] += 1
+    return counts, plan
+
+
+def _window_part_mask(pat, n):
+    """pattern.mask() minus the global-rows overwrite (dense epilogue)."""
+    m = pat.mask(n).copy()
+    if pat.n_global > 0 and pat.global_rows:
+        # plan covers global ROWS only where window/global-col do; the dense
+        # epilogue overwrites those rows, so exclude them from the contract
+        sub = P.HybridSparsePattern(
+            window=pat.window, dilation=pat.dilation, n_global=pat.n_global,
+            global_rows=False, causal=pat.causal, grid2d=pat.grid2d,
+            window2d=pat.window2d)
+        m = sub.mask(n)
+    return m
+
+
+PLAN_CASES = [
+    ("sliding", P.HybridSparsePattern(window=(-3, 2)), 20, 8, 8),
+    ("causal_sw", P.causal_sliding_window(7), 33, 8, 16),
+    ("sinks", P.causal_sliding_window(6, n_sinks=3), 40, 16, 8),
+    ("longformer", P.longformer(8, n_global=2), 37, 8, 8),
+    ("longformer_causal", P.longformer(8, n_global=2, causal=True),
+     37, 8, 8),
+    ("dilated", P.dilated_window(4, 3), 29, 8, 8),
+    ("dilated_causal", P.dilated_window(4, 3, causal=True), 29, 8, 8),
+    ("dilated_sinks", P.causal_sliding_window(5, n_sinks=2, dilation=2),
+     31, 8, 8),
+    ("vil_2d", P.vil((5, 7), (3, 3), n_global=2), 37, 8, 8),
+    ("vil_2d_wide", P.vil((4, 5), (3, 5), n_global=1), 21, 4, 8),
+    # ww > W: adjacent bands' rel ranges overlap — the per-band walk with a
+    # rel-only restriction double-counted these; one-visit-per-tile can't.
+    ("vil_2d_overlap", P.vil((5, 4), (3, 5), n_global=1), 21, 8, 8),
+    ("asym", P.HybridSparsePattern(window=(-5, 3), n_global=3,
+                                   global_rows=False), 26, 8, 4),
+    ("full_causal", P.full(causal=True), 19, 8, 8),
+]
+
+
+@pytest.mark.parametrize("name,pat,n,bq,bk", PLAN_CASES)
+def test_plan_covers_mask_exactly(name, pat, n, bq, bk):
+    """Each attended pair is visited EXACTLY once; nothing else ever is."""
+    counts, _ = _simulate_coverage(pat, n, bq, bk)
+    expect = _window_part_mask(pat, n)
+    assert (counts <= 1).all(), f"{name}: double-counted pairs"
+    np.testing.assert_array_equal(counts.astype(bool), expect,
+                                  err_msg=f"{name}: coverage != mask")
+
+
+if HAVE_HYPOTHESIS:
+    @given(w=st.integers(1, 9), d=st.integers(1, 4), n=st.integers(4, 64),
+           g=st.integers(0, 3), causal=st.booleans(),
+           bq=st.sampled_from([4, 8, 16]), bk=st.sampled_from([4, 8, 16]))
+    @settings(max_examples=40, deadline=None)
+    def test_plan_coverage_property(w, d, n, g, causal, bq, bk):
+        pat = (P.causal_sliding_window(w, n_sinks=g, dilation=d) if causal
+               else P.HybridSparsePattern(
+                   window=(-(w // 2) * d, (w - w // 2 - 1) * d),
+                   dilation=d, n_global=g, global_rows=False))
+        counts, _ = _simulate_coverage(pat, n, bq, bk)
+        assert (counts <= 1).all()
+        np.testing.assert_array_equal(counts.astype(bool), pat.mask(n))
+else:  # visible skip, not silent disappearance
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_plan_coverage_property():
+        pass
+
+
+# ------------------------------ dedup ---------------------------------- #
+def test_vil_dedup_is_real():
+    """ViL multi-band: fused executed tiles STRICTLY below the sum of
+    per-band walks (the tiles overlapping bands used to re-fetch)."""
+    pat = P.vil((8, 9), (3, 5), n_global=1)
+    sched = schedule(pat, pat.seq_len())
+    assert len(sched.bands) >= 3
+    plan = build_plan(sched, 16, 16)
+    stats = plan.stats()
+    assert stats["executed_tiles"] < stats["per_band_tiles"], stats
+    assert stats["launches"] == 1
+    assert stats["per_band_launches"] == len(sched.bands)
+
+
+def test_vil_15_band_dedup_ratio():
+    """Paper-scale ViL (15 bands, 64x64 grid, 128-tiles): dedup collapses
+    the walk by >2x — the launch-per-band path re-fetched that much."""
+    pat = P.vil((64, 64), (15, 15), n_global=1)
+    sched = schedule(pat, pat.seq_len())
+    assert len(sched.bands) == 15
+    plan = build_plan(sched, 128, 128)
+    stats = plan.stats()
+    assert stats["per_band_tiles"] / stats["executed_tiles"] > 2.0, stats
+
+
+def test_work_estimate_uses_plan():
+    """work_estimate no longer over-counts overlapping bands."""
+    pat = P.vil((8, 9), (3, 5), n_global=1)
+    sched = schedule(pat, pat.seq_len())
+    est = sched.work_estimate(16, 16)
+    assert est["executed_pairs"] == est["executed_tiles"] * 16 * 16
+    # single-band sanity: longformer utilization stays high
+    est_lf = schedule(P.longformer(512, n_global=1), 4096).work_estimate(
+        32, 32)
+    assert est_lf["utilization"] > 0.75
+
+
+def test_band_set_ids_index_covering_bands():
+    """band_set_ids tags each visit with the bands whose walk covers it."""
+    pat = P.vil((5, 7), (3, 3), n_global=1)
+    sched = schedule(pat, pat.seq_len())
+    plan = build_plan(sched, 8, 8)
+    for i in range(plan.nq):
+        for s in range(int(plan.num_steps[i])):
+            sid = int(plan.band_set_ids[i, s])
+            fl = int(plan.flags[i, s])
+            bset = plan.band_sets[sid]
+            assert (fl & STEP_WINDOW != 0) == (len(bset) > 0)
+            t = int(plan.kv_blocks[i, s])
+            for bi in bset:
+                band = sched.bands[bi]
+                s0 = band.kv_start_block(i, 8, 8)
+                assert s0 <= t < s0 + band.kv_steps(8, 8)
+    # padding steps carry no band set and no flags
+    for i in range(plan.nq):
+        for s in range(int(plan.num_steps[i]), plan.max_steps):
+            assert plan.band_set_ids[i, s] == -1
+            assert plan.flags[i, s] == 0
+
+
+def test_global_tiles_follow_reordering():
+    """Dilation scatters the global keys; the plan's STEP_GLOBAL tiles must
+    follow them into the reordered working stream."""
+    pat = P.causal_sliding_window(5, n_sinks=3, dilation=2)
+    sched = schedule(pat, 30)
+    plan = build_plan(sched, 8, 8)
+    pos = plan.positions_padded()
+    gtiles = {t for t in range(plan.nkb)
+              if (pos[t * 8:(t + 1) * 8] < 3).any()}
+    assert len(gtiles) > 1  # reordering really scattered the sinks
+    for i in range(plan.nq):
+        row = {int(plan.kv_blocks[i, s])
+               for s in range(int(plan.num_steps[i]))
+               if plan.flags[i, s] & STEP_GLOBAL}
+        assert row == gtiles
+
+
+# ------------------------- one launch, one truth ------------------------ #
+def _count_pallas_calls(monkeypatch, fn):
+    """Count pallas_call invocations during (re)tracing of ``fn()``."""
+    from jax.experimental import pallas as pl_mod
+    from repro.kernels import salo_attention as sa
+
+    counter = {"n": 0}
+    real = pl_mod.pallas_call
+
+    def counting(*args, **kwargs):
+        counter["n"] += 1
+        return real(*args, **kwargs)
+
+    monkeypatch.setattr(sa.pl, "pallas_call", counting)
+    out = fn()
+    return counter["n"], out
+
+
+LAUNCH_CASES = [
+    # ViL: 2-D, >= 3 bands, global token
+    ("vil", P.vil((8, 9), (3, 5), n_global=1), 16, 16),
+    # reordered + global: dilated sliding window + attention sinks
+    ("dilated_sinks", P.causal_sliding_window(6, n_sinks=2, dilation=3),
+     16, 16),
+]
+
+
+@pytest.mark.parametrize("name,pat,bq,bk", LAUNCH_CASES)
+def test_exactly_one_pallas_call_per_forward(monkeypatch, name, pat, bq, bk):
+    from repro.kernels.ops import salo_attention
+    from repro.kernels.ref import reference_attention
+
+    n = pat.seq_len() or 50
+    rng = np.random.default_rng(0)
+    q, k, v = (jnp.asarray(rng.normal(size=(2, n, 16)), jnp.float32)
+               for _ in range(3))
+    launches, out = _count_pallas_calls(
+        monkeypatch, lambda: salo_attention(q, k, v, pat, bq, bk, None, True))
+    assert launches == 1, f"{name}: {launches} launches (want exactly 1)"
+    ref = reference_attention(q, k, v, pat)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_vil_multiband_interpret_matches_dense_ref():
+    """ViL (15 overlapping bands at this tile size) end to end through the
+    fused kernel in interpret mode vs the dense oracle."""
+    from repro.core.attention import hybrid_attention
+
+    pat = P.vil((8, 9), (5, 5), n_global=2)
+    n = pat.seq_len()
+    rng = np.random.default_rng(1)
+    q, k, v = (jnp.asarray(rng.normal(size=(1, 2, n, 32)), jnp.float32)
+               for _ in range(3))
+    ref = hybrid_attention(q, k, v, pat, impl="dense_ref")
+    out = hybrid_attention(q, k, v, pat, impl="pallas_interpret",
+                           block_q=16, block_k=16)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_overlapping_bands_no_double_count_end_to_end():
+    """ww > W makes adjacent bands' offset ranges overlap; both engines must
+    still weight each pair once (softmax would skew if counted twice)."""
+    from repro.core.attention import hybrid_attention
+
+    pat = P.vil((5, 4), (3, 5), n_global=1)
+    n = pat.seq_len()
+    rng = np.random.default_rng(2)
+    q, k, v = (jnp.asarray(rng.normal(size=(1, 2, n, 16)), jnp.float32)
+               for _ in range(3))
+    ref = hybrid_attention(q, k, v, pat, impl="dense_ref")
+    for impl in ("blockwise", "pallas_interpret"):
+        out = hybrid_attention(q, k, v, pat, impl=impl, block_q=8,
+                               block_k=8)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=2e-3, atol=2e-3, err_msg=impl)
+
+
+def test_blockwise_and_kernel_share_plan_tables():
+    """Both engines consume the identical plan object (single source of
+    truth): same tables, same masks."""
+    pat = P.vil((5, 7), (3, 3), n_global=1)
+    sched = schedule(pat, pat.seq_len())
+    p1 = build_plan(sched, 8, 8)
+    p2 = sched.plan(8, 8)
+    assert p1 is p2  # lru-cached: one plan per (schedule, tile geometry)

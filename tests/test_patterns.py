@@ -1,7 +1,12 @@
 """Pattern/mask/scheduler unit + property tests."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:  # property tests need hypothesis; deterministic tests run without it
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
 
 from repro.core import patterns as P
 from repro.core.scheduler import schedule
@@ -65,50 +70,59 @@ def test_2d_mask_neighbourhood():
     assert att == expect
 
 
-@given(w=st.integers(1, 9), d=st.integers(1, 4), n=st.integers(4, 64),
-       g=st.integers(0, 3), causal=st.booleans())
-@settings(max_examples=60, deadline=None)
-def test_schedule_bands_cover_mask(w, d, n, g, causal):
-    """Property: the band schedule + global column covers EXACTLY the
-    pattern mask (no pair missed, none double-counted)."""
-    pat = P.causal_sliding_window(w, n_sinks=g, dilation=d) if causal else \
-        P.HybridSparsePattern(window=(-(w // 2) * d, (w - w // 2 - 1) * d),
-                              dilation=d, n_global=g, global_rows=False)
-    sched = schedule(pat, n)
-    mask = pat.mask(n)
-    pos = sched.positions()
-    nw = sched.n_work
-    covered = np.zeros((n, n), dtype=int)
-    # band coverage in working space
-    for band in sched.bands:
-        for wi in range(nw):
-            for wj in range(max(0, wi + band.lo),
-                            min(nw, wi + band.hi + 1)):
-                pi, pj = pos[wi], pos[wj]
-                if pi < n and pj < n:
-                    wm = bool(np.asarray(sched.window_mask(pi, pj)))
-                    if wm:
-                        covered[pi, pj] += 1
-    # global column
-    for pi in range(n):
-        for pj in range(min(g, n)):
-            if bool(np.asarray(sched.global_col_mask(pi, pj))):
-                covered[pi, pj] += 1
-    assert (covered <= 1).all(), "double counted"
-    np.testing.assert_array_equal(covered.astype(bool), mask)
+if HAVE_HYPOTHESIS:
+    @given(w=st.integers(1, 9), d=st.integers(1, 4), n=st.integers(4, 64),
+           g=st.integers(0, 3), causal=st.booleans())
+    @settings(max_examples=60, deadline=None)
+    def test_schedule_bands_cover_mask(w, d, n, g, causal):
+        """Property: the band schedule + global column covers EXACTLY the
+        pattern mask (no pair missed, none double-counted)."""
+        pat = P.causal_sliding_window(w, n_sinks=g, dilation=d) if causal \
+            else P.HybridSparsePattern(
+                window=(-(w // 2) * d, (w - w // 2 - 1) * d),
+                dilation=d, n_global=g, global_rows=False)
+        sched = schedule(pat, n)
+        mask = pat.mask(n)
+        pos = sched.positions()
+        nw = sched.n_work
+        covered = np.zeros((n, n), dtype=int)
+        # band coverage in working space
+        for band in sched.bands:
+            for wi in range(nw):
+                for wj in range(max(0, wi + band.lo),
+                                min(nw, wi + band.hi + 1)):
+                    pi, pj = pos[wi], pos[wj]
+                    if pi < n and pj < n:
+                        wm = bool(np.asarray(sched.window_mask(pi, pj)))
+                        if wm:
+                            covered[pi, pj] += 1
+        # global column
+        for pi in range(n):
+            for pj in range(min(g, n)):
+                if bool(np.asarray(sched.global_col_mask(pi, pj))):
+                    covered[pi, pj] += 1
+        assert (covered <= 1).all(), "double counted"
+        np.testing.assert_array_equal(covered.astype(bool), mask)
 
+    @given(d=st.integers(1, 5), n=st.integers(3, 50))
+    @settings(max_examples=30, deadline=None)
+    def test_reorder_perm_is_permutation(d, n):
+        pat = P.causal_sliding_window(2, dilation=d)
+        sched = schedule(pat, n)
+        if sched.perm is None:
+            assert d == 1
+            return
+        inv = sched.inverse_perm()
+        assert sorted(sched.perm[sched.perm < n]) == list(range(n))
+        np.testing.assert_array_equal(sched.perm[inv], np.arange(n))
+else:  # visible skips, not silent disappearance
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_schedule_bands_cover_mask():
+        pass
 
-@given(d=st.integers(1, 5), n=st.integers(3, 50))
-@settings(max_examples=30, deadline=None)
-def test_reorder_perm_is_permutation(d, n):
-    pat = P.causal_sliding_window(2, dilation=d)
-    sched = schedule(pat, n)
-    if sched.perm is None:
-        assert d == 1
-        return
-    inv = sched.inverse_perm()
-    assert sorted(sched.perm[sched.perm < n]) == list(range(n))
-    np.testing.assert_array_equal(sched.perm[inv], np.arange(n))
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_reorder_perm_is_permutation():
+        pass
 
 
 def test_work_estimate_utilization():

@@ -61,8 +61,7 @@ def test_dryrun_single_cell_smoke(tmp_path):
         from repro.configs.base import ShapeCell
         from repro.launch.specs import build_cell
         from repro.roofline import analysis
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh = jax.make_mesh((2, 4), ("data", "model"))
         cfg = get_smoke("gemma-7b")
         for shape in (ShapeCell("t", 64, 4, "train"),
                       ShapeCell("d", 64, 4, "decode")):
