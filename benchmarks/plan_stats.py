@@ -1,4 +1,5 @@
-"""Fused ExecutionPlan vs per-band-launch comparison -> BENCH_plan.json.
+"""Fused ExecutionPlan vs per-band-launch comparison -> BENCH_plan.json,
+plus backward-plan accounting -> BENCH_bwd.json.
 
 For the paper's workloads (Longformer-4k, ViL grids from 8x9 up to 64x64)
 this reports, per workload:
@@ -9,10 +10,18 @@ this reports, per workload:
   * measured wall-time of the fused single-pass blockwise engine vs a
     faithful emulation of the per-band path (one plan pass per band + one
     global-only pass, partials merged with renorm.merge — exactly the
-    retired ops.py data flow).
+    retired ops.py data flow);
+  * **backward accounting** (``BENCH_bwd.json``): tiles of the dQ pass
+    (forward tables) vs the dK/dV pass (transposed tables) vs a dense
+    backward — the transposed walk must preserve the forward dedup
+    (ratio ~1.0) — plus measured wall-time AND XLA temp-buffer bytes of the
+    plan-driven custom VJP vs autodiff through the sequential scan (the
+    retired backward): the flash-style residual reuse shows up as a multi-x
+    temp-memory reduction (the scan autodiff stashes every step's gathered
+    tiles and probability matrices).
 
-Used by ``python -m benchmarks.run`` (section ``plan/``) and writable as a
-standalone JSON via ``python -m benchmarks.plan_stats [--out PATH]``.
+Used by ``python -m benchmarks.run`` (sections ``plan/`` and ``bwd/``) and
+writable as standalone JSONs via ``python -m benchmarks.plan_stats``.
 """
 from __future__ import annotations
 
@@ -41,21 +50,11 @@ WORKLOADS = [
 
 
 def _working_stream(q, k, v, sched, plan):
-    """Reorder + pad to the plan's tile grid (what both engines do)."""
-    N = q.shape[1]
-    if sched.reordered:
-        perm = jnp.asarray(sched.perm)
-        take = jnp.clip(perm, 0, N - 1)
-        valid = (perm < N)[None, :, None]
-        q = jnp.where(valid, jnp.take(q, take, axis=1), 0)
-        k = jnp.where(valid, jnp.take(k, take, axis=1), 0)
-        v = jnp.where(valid, jnp.take(v, take, axis=1), 0)
-    pad = plan.n_pad - q.shape[1]
-    if pad:
-        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0)))
-        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0)))
-        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0)))
-    return q, k, v, jnp.asarray(plan.positions_padded())
+    """Reorder + pad to the plan's tile grid — the engines' shared helper."""
+    from repro.core.blockwise import working_stream
+    return (working_stream(q, sched, plan), working_stream(k, sched, plan),
+            working_stream(v, sched, plan),
+            jnp.asarray(plan.positions_padded()))
 
 
 def _band_pass(q_blk, k_pad, v_pad, pos_pad, sub_plan, band, scale):
@@ -169,6 +168,15 @@ def collect(measure: bool = True, d_head: int = 64) -> dict:
     return out
 
 
+def _write_json(data, out_path, measure):
+    """Write the artifact only for measured runs — a --quick/--no-measure
+    pass must not clobber the committed JSON's wall/memory fields."""
+    if not measure:
+        return
+    with open(out_path, "w") as f:
+        json.dump(data, f, indent=1, sort_keys=True)
+
+
 def plan_benchmark(rows, measure: bool = True,
                    out_path: str = "BENCH_plan.json") -> dict:
     """benchmarks.run section: report + write BENCH_plan.json."""
@@ -185,23 +193,114 @@ def plan_benchmark(rows, measure: bool = True,
             rows.append((f"plan/{name}/wall_speedup", e["wall_speedup"],
                          f"fused={e['fused']['wall_s']*1e3:.1f}ms_perband="
                          f"{e['per_band']['wall_s']*1e3:.1f}ms"))
-    with open(out_path, "w") as f:
-        json.dump(data, f, indent=1, sort_keys=True)
+    _write_json(data, out_path, measure)
+    return data
+
+
+# ---------------------------------------------------------------------- #
+# Backward accounting: fwd-plan dQ vs transposed-plan dK/dV vs dense
+# ---------------------------------------------------------------------- #
+def collect_bwd(measure: bool = True, d_head: int = 64) -> dict:
+    from repro.core.blockwise import _blockwise_forward
+
+    rng = np.random.default_rng(0)
+    out = {}
+    for name, pat, n, bq, bk in WORKLOADS:
+        n = n if n is not None else pat.seq_len()
+        sched = schedule(pat, n)
+        plan = build_plan(sched, bq, bk)
+        stats = plan.stats()
+        dense_tiles = plan.nq * plan.nkb  # one dense pass, per direction
+        entry = {
+            "n": n, "block_q": bq, "block_k": bk,
+            "dq_tiles": stats["bwd_dq_tiles"],            # forward tables
+            "dkv_tiles": stats["bwd_dkv_tiles"],          # transposed tables
+            "dense_tiles_per_pass": dense_tiles,
+            "bwd_launches": stats["bwd_launches"],
+            # dedup preservation: the transposed walk must not exceed the
+            # forward walk (they regroup the SAME deduplicated visit set)
+            "transposed_ratio": stats["bwd_dkv_tiles"]
+            / max(stats["bwd_dq_tiles"], 1),
+            "dense_ratio": 2 * dense_tiles
+            / max(stats["bwd_dq_tiles"] + stats["bwd_dkv_tiles"], 1),
+        }
+        if measure:
+            q, k, v, cot = (jnp.asarray(rng.normal(size=(2, n, d_head)),
+                                        jnp.float32) for _ in range(4))
+
+            def loss_fused(a, b, c, p=pat):
+                return jnp.sum(blockwise_attention(
+                    a, b, c, p, block_q=bq, block_k=bk) * cot)
+
+            def loss_scan_autodiff(a, b, c, p=pat):
+                # the retired backward: differentiate THROUGH the scan
+                out_, _ = _blockwise_forward(a, b, c, p, bq, bk, None)
+                return jnp.sum(out_ * cot)
+
+            g_fused = jax.jit(jax.grad(loss_fused, argnums=(0, 1, 2)))
+            g_scan = jax.jit(jax.grad(loss_scan_autodiff, argnums=(0, 1, 2)))
+            entry["fused_bwd_wall_s"] = _time(g_fused, q, k, v)
+            entry["scan_autodiff_wall_s"] = _time(g_scan, q, k, v)
+            entry["bwd_speedup"] = (entry["scan_autodiff_wall_s"]
+                                    / entry["fused_bwd_wall_s"])
+            # The flash-style payoff: residuals are (out, m, l) — O(N) —
+            # instead of XLA stashing every scan step's gathered tiles and
+            # probability matrices. XLA's own accounting of temp buffers:
+            for key, fn in (("fused", g_fused), ("scan_autodiff", g_scan)):
+                ma = fn.lower(q, k, v).compile().memory_analysis()
+                if isinstance(ma, list):  # old jax: one entry per device
+                    ma = ma[0] if ma else None
+                if ma is not None:  # some backends provide no analysis
+                    entry[f"{key}_temp_bytes"] = int(ma.temp_size_in_bytes)
+            if "scan_autodiff_temp_bytes" in entry \
+                    and "fused_temp_bytes" in entry:
+                entry["bwd_mem_ratio"] = (entry["scan_autodiff_temp_bytes"]
+                                          / max(entry["fused_temp_bytes"], 1))
+        out[name] = entry
+    return out
+
+
+def bwd_benchmark(rows, measure: bool = True,
+                  out_path: str = "BENCH_bwd.json") -> dict:
+    """benchmarks.run section: report + write BENCH_bwd.json."""
+    data = collect_bwd(measure=measure)
+    for name, e in data.items():
+        rows.append((f"bwd/{name}/dq_tiles", e["dq_tiles"],
+                     "forward-plan walk"))
+        rows.append((f"bwd/{name}/dkv_tiles", e["dkv_tiles"],
+                     "transposed-plan walk"))
+        rows.append((f"bwd/{name}/transposed_ratio", e["transposed_ratio"],
+                     "dkv_tiles/dq_tiles (dedup preserved ~1.0)"))
+        rows.append((f"bwd/{name}/dense_ratio", e["dense_ratio"],
+                     "2*dense_tiles/(dq+dkv)"))
+        if "bwd_speedup" in e:
+            rows.append((f"bwd/{name}/bwd_speedup", e["bwd_speedup"],
+                         f"fused={e['fused_bwd_wall_s']*1e3:.1f}ms_scanAD="
+                         f"{e['scan_autodiff_wall_s']*1e3:.1f}ms"))
+        if "bwd_mem_ratio" in e:
+            rows.append((f"bwd/{name}/bwd_mem_ratio", e["bwd_mem_ratio"],
+                         f"scanAD_temp={e['scan_autodiff_temp_bytes']}"
+                         f"_fused_temp={e['fused_temp_bytes']}"))
+    _write_json(data, out_path, measure)
     return data
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--out", default="BENCH_plan.json")
+    ap.add_argument("--bwd-out", default="BENCH_bwd.json")
     ap.add_argument("--no-measure", action="store_true",
-                    help="static tile/launch stats only (no wall-time)")
+                    help="static tile/launch stats only (no wall-time; "
+                         "does NOT rewrite the committed JSONs)")
     args = ap.parse_args()
     rows = []
     plan_benchmark(rows, measure=not args.no_measure, out_path=args.out)
+    bwd_benchmark(rows, measure=not args.no_measure, out_path=args.bwd_out)
     print("name,value,derived")
     for name, value, derived in rows:
         print(f"{name},{value:.6g},{derived}")
-    print(f"# wrote {args.out}")
+    if not args.no_measure:
+        print(f"# wrote {args.out} and {args.bwd_out}")
 
 
 if __name__ == "__main__":

@@ -25,6 +25,8 @@ def main() -> None:
     paper_claims.table3_quantization(rows)
     # ExecutionPlan: fused single-launch vs per-band-launch (BENCH_plan.json)
     plan_stats.plan_benchmark(rows, measure=not args.quick)
+    # Backward: fwd-plan dQ vs transposed-plan dK/dV vs dense (BENCH_bwd.json)
+    plan_stats.bwd_benchmark(rows, measure=not args.quick)
     if not args.quick:
         paper_claims.fig7_speedup(rows)
         paper_claims.sec21_quadratic_scaling(rows)
@@ -49,6 +51,16 @@ def main() -> None:
         # multi-band workloads: the plan's dedup must be real, not cosmetic
         if k.startswith("plan/vil") and k.endswith("dedup_ratio") and v <= 1.0:
             failures.append((k, v, "> 1.0 (fused < sum of per-band walks)"))
+        # backward: transposed walk must preserve the forward dedup — two-
+        # sided, since a transpose that DROPS visits (ratio < 1) means
+        # missing dK/dV contributions, not savings
+        if k.startswith("bwd/") and k.endswith("transposed_ratio") \
+                and abs(v - 1.0) > 0.1:
+            failures.append((k, v, "in [0.9, 1.1] (transposed plan dedup)"))
+        # flash-style residual reuse: custom VJP must need well under the
+        # scan-autodiff's temp memory (measured 3.2-9.1x on these workloads)
+        if k.startswith("bwd/") and k.endswith("bwd_mem_ratio") and v < 2.0:
+            failures.append((k, v, ">= 2.0 (fused bwd temp memory win)"))
     if failures:
         for f in failures:
             print(f"CHECK-FAILED: {f}", file=sys.stderr)

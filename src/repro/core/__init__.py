@@ -5,7 +5,8 @@ from repro.core.patterns import (HybridSparsePattern, longformer,
                                  causal_sliding_window, dilated_window, vil,
                                  full)
 from repro.core.scheduler import (BandSchedule, Band, ExecutionPlan,
-                                  PAD_SENTINEL, build_plan, schedule)
+                                  PAD_SENTINEL, TransposedPlan, build_plan,
+                                  build_transposed, schedule)
 from repro.core.attention import hybrid_attention, hybrid_decode_attention
 from repro.core.blockwise import blockwise_attention, decode_attention
 from repro.core import renorm, quant
@@ -13,7 +14,8 @@ from repro.core import renorm, quant
 __all__ = [
     "HybridSparsePattern", "longformer", "causal_sliding_window",
     "dilated_window", "vil", "full", "BandSchedule", "Band", "ExecutionPlan",
-    "PAD_SENTINEL", "build_plan", "schedule",
+    "PAD_SENTINEL", "TransposedPlan", "build_plan", "build_transposed",
+    "schedule",
     "hybrid_attention", "hybrid_decode_attention", "blockwise_attention",
     "decode_attention", "renorm", "quant",
 ]

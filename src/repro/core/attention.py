@@ -19,9 +19,14 @@ Engines:
                            step table streamed via scalar prefetch
   * ``pallas_interpret``   same kernel, interpret mode (CPU numerics check)
 
-All engines are drop-in equivalent (tested to tolerance); training autodiffs
-through ``blockwise``; ``pallas`` installs a custom_vjp whose backward is the
-blockwise autodiff (see kernels/ops.py).
+All engines are drop-in equivalent (tested to tolerance), forward AND
+backward: both differentiable engines install a plan-driven custom VJP that
+reuses the forward's saved ``(out, m, l)`` partials — ``blockwise`` as two
+table-walking scans, ``pallas`` as two flash-style kernel launches (dQ over
+the forward tables, dK/dV over the transposed tables; see
+kernels/salo_backward.py). The blockwise scan engines stand in for the
+``pallas`` kernels only when they cannot execute (compiled mode on a
+non-TPU backend; see kernels/ops.py) — same residuals, same contract.
 """
 from __future__ import annotations
 
@@ -50,12 +55,19 @@ def hybrid_attention(q: jax.Array, k: jax.Array, v: jax.Array,
     if Hkv != H:
         assert H % Hkv == 0, f"GQA heads {H} not divisible by kv heads {Hkv}"
         rep = H // Hkv
-        k = jnp.repeat(k, rep, axis=1)
-        v = jnp.repeat(v, rep, axis=1)
+        # broadcast_to + reshape, NOT jnp.repeat: XLA keeps the expand as a
+        # no-copy broadcast fused into the consumer (repeat materializes the
+        # KV stream rep x in HBM).
+        k = jnp.broadcast_to(k[:, :, None], (B, Hkv, rep, N, D))
+        v = jnp.broadcast_to(v[:, :, None], (B, Hkv, rep, N, D))
+        k = k.reshape(B, H, N, D)
+        v = v.reshape(B, H, N, D)
 
     qf = q.reshape(B * H, N, D)
     kf = k.reshape(B * H, N, D)
     vf = v.reshape(B * H, N, D)
+    assert qf.shape == kf.shape == vf.shape == (B * H, N, D), \
+        "engines (incl. pallas) require the flat (B*H, N, D) layout"
 
     if impl == "dense_ref":
         from repro.kernels.ref import reference_attention

@@ -5,7 +5,8 @@ This is the *algorithmic twin* of the Pallas kernel: it walks the SAME
 per-step masks (``plan.step_mask``), folded through the same renormalized
 online-softmax state. It exists because
 
-1. training needs autodiff (everything here is differentiable jnp),
+1. training needs a CPU/XLA path (the backward here is the plan-driven
+   custom VJP below, not autodiff through the scan),
 2. the CPU-only dry-run must lower something honest for roofline analysis
    (Pallas TPU kernels cannot be lowered by the CPU backend).
 
@@ -13,6 +14,18 @@ One ``lax.scan`` over ``plan.max_steps`` executes every band AND the global
 column — overlapping KV tiles deduplicated to one visit, no per-band passes,
 no separate global partial. Global rows (global queries attend everything)
 are a dense g-row epilogue shared with the kernel wrapper.
+
+**Backward contract (shared with kernels/ops.py).** Both engines save the
+forward's already-computed partial triple ``(out, m, l)`` as residuals and
+recompute the attention probabilities ``p = exp(s - m) / l`` tile-by-tile in
+the backward — flash-style, no O(n^2) residuals, no forward re-run. The dQ
+pass replays the forward tables; the dK/dV pass walks
+``plan.transposed()`` (the exact adjoint regrouping of the same
+deduplicated visits). :func:`plan_backward` owns the host-step adjoints
+(global-rows epilogue, reorder, pad, the ``delta = sum(dout * out)``
+precompute) and is parameterized over the two gradient passes, so the
+Pallas kernels (kernels/salo_backward.py) and the scan engines here
+(:func:`bwd_dq_scan`, :func:`bwd_dkv_scan`) execute ONE contract.
 
 Shapes: q, k, v are ``(B, N, D)`` where ``B`` folds batch*heads. The public
 model-facing API lives in :mod:`repro.core.attention`.
@@ -39,6 +52,36 @@ from repro.core.patterns import HybridSparsePattern
 def _dot(a, b):
     return jnp.einsum("...qd,...kd->...qk", a, b,
                       preferred_element_type=jnp.float32)
+
+
+# ---------------------------------------------------------------------- #
+# Working-stream host steps (shared by both engines, forward AND backward)
+# ---------------------------------------------------------------------- #
+def working_stream(x: jax.Array, sched: BandSchedule,
+                   plan: ExecutionPlan) -> jax.Array:
+    """Original order -> working layout: dilation reorder + pad to n_pad.
+
+    ``x``: (B, N, ...) along axis 1. The reorder is a permutation, so this
+    transform is also the ADJOINT of the forward's output un-reordering —
+    the same function maps inputs forward and output-cotangents backward.
+    """
+    N = x.shape[1]
+    if sched.reordered:
+        perm = jnp.asarray(sched.perm)
+        take = jnp.clip(perm, 0, N - 1)
+        valid = (perm < N).reshape((1, -1) + (1,) * (x.ndim - 2))
+        x = jnp.where(valid, jnp.take(x, take, axis=1), 0)
+    pad = plan.n_pad - x.shape[1]
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad)) + ((0, 0),) * (x.ndim - 2))
+    return x
+
+
+def undo_working(x_w: jax.Array, sched: BandSchedule, n: int) -> jax.Array:
+    """Working layout -> original order (inverse of :func:`working_stream`)."""
+    if sched.reordered:
+        return jnp.take(x_w, jnp.asarray(sched.inverse_perm()), axis=1)
+    return x_w[:, :n]
 
 
 def _plan_partial(state: renorm.PartialState, q_blk, k_pad, v_pad, pos_pad,
@@ -133,37 +176,21 @@ def _global_rows(q_orig, k_orig, v_orig, sched: BandSchedule, scale: float,
                       v_orig[:, :n].astype(p.dtype)).astype(out_dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("pattern", "block_q", "block_k",
-                                             "return_state"))
-def blockwise_attention(q: jax.Array, k: jax.Array, v: jax.Array,
-                        pattern: HybridSparsePattern, *,
-                        block_q: int = 128, block_k: int = 128,
-                        scale: Optional[float] = None,
-                        return_state: bool = False):
-    """Hybrid sparse attention via the SALO ExecutionPlan. q,k,v: (B, N, D)."""
+def _blockwise_forward(q, k, v, pattern, block_q, block_k, scale,
+                       return_state=False):
+    """Plan walk + host steps. Returns ``(out, (out_w, m, l))`` — the
+    working-space partial triple doubles as the backward's residuals —
+    or the raw PartialState when ``return_state``."""
     B, N, D = q.shape
     scale = (D ** -0.5) if scale is None else scale
     sched = schedule(pattern, N)
     plan = sched.plan(block_q, block_k)
     out_dtype = q.dtype
 
-    # --- data reordering (dilation) ------------------------------------ #
-    if sched.reordered:
-        perm = jnp.asarray(sched.perm)
-        take = jnp.clip(perm, 0, N - 1)
-        pad_valid = (perm < N)[None, :, None]
-        qw = jnp.where(pad_valid, jnp.take(q, take, axis=1), 0)
-        kw = jnp.where(pad_valid, jnp.take(k, take, axis=1), 0)
-        vw = jnp.where(pad_valid, jnp.take(v, take, axis=1), 0)
-    else:
-        qw, kw, vw = q, k, v
-
-    # --- sequence splitting: pad to the plan's tile grid ----------------- #
-    pad = plan.n_pad - qw.shape[1]
-    if pad:
-        qw = jnp.pad(qw, ((0, 0), (0, pad), (0, 0)))
-        kw = jnp.pad(kw, ((0, 0), (0, pad), (0, 0)))
-        vw = jnp.pad(vw, ((0, 0), (0, pad), (0, 0)))
+    # --- data reordering (dilation) + padding to the tile grid ---------- #
+    qw = working_stream(q, sched, plan)
+    kw = working_stream(k, sched, plan)
+    vw = working_stream(v, sched, plan)
     pos = jnp.asarray(plan.positions_padded())
 
     nq = plan.nq
@@ -175,20 +202,225 @@ def blockwise_attention(q: jax.Array, k: jax.Array, v: jax.Array,
     if return_state:
         return state
 
-    out = renorm.finalize(state, out_dtype).reshape(B, plan.n_pad, D)
+    out_w = renorm.finalize(state, out_dtype).reshape(B, plan.n_pad, D)
+    m = state.m.reshape(B, plan.n_pad)
+    l = state.l.reshape(B, plan.n_pad)
 
     # --- undo reordering / padding -------------------------------------- #
-    if sched.reordered:
-        inv = jnp.asarray(sched.inverse_perm())
-        out = jnp.take(out, inv, axis=1)
-    else:
-        out = out[:, :N]
+    out = undo_working(out_w, sched, N)
 
     # --- global rows (paper's global PE row) ----------------------------- #
     if sched.n_global > 0 and sched.global_rows:
         rows = _global_rows(q, k, v, sched, scale, out_dtype)
         out = out.at[:, : sched.n_global].set(rows)
+    return out, (out_w, m, l)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def _blockwise(q, k, v, pattern, block_q, block_k, scale):
+    out, _ = _blockwise_forward(q, k, v, pattern, block_q, block_k, scale)
     return out
+
+
+def _blockwise_fwd(q, k, v, pattern, block_q, block_k, scale):
+    out, (out_w, m, l) = _blockwise_forward(q, k, v, pattern, block_q,
+                                            block_k, scale)
+    return out, (q, k, v, out_w, m, l)
+
+
+def _blockwise_bwd(pattern, block_q, block_k, scale, res, g):
+    q, k, v, out_w, m, l = res
+    B, N, D = q.shape
+    scale_ = (D ** -0.5) if scale is None else scale
+    plan = schedule(pattern, N).plan(block_q, block_k)
+    return plan_backward(
+        g, q, k, v, out_w, m, l, plan, scale_,
+        functools.partial(bwd_dq_scan, plan=plan, scale=scale_),
+        functools.partial(bwd_dkv_scan, plan=plan, scale=scale_))
+
+
+_blockwise.defvjp(_blockwise_fwd, _blockwise_bwd)
+
+
+@functools.partial(jax.jit, static_argnames=("pattern", "block_q", "block_k",
+                                             "scale", "return_state"))
+def blockwise_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                        pattern: HybridSparsePattern, *,
+                        block_q: int = 128, block_k: int = 128,
+                        scale: Optional[float] = None,
+                        return_state: bool = False):
+    """Hybrid sparse attention via the SALO ExecutionPlan. q,k,v: (B, N, D).
+
+    Differentiating through this uses the plan-driven custom VJP (dQ over
+    the forward tables, dK/dV over the transposed tables, ``p`` recomputed
+    from the saved ``(out, m, l)``) — NOT autodiff through the scan, which
+    would re-run the forward sequentially and materialize per-step
+    residuals. ``return_state=True`` returns the raw PartialState (for
+    cross-device merges) and bypasses the custom VJP.
+    """
+    if return_state:
+        return _blockwise_forward(q, k, v, pattern, block_q, block_k, scale,
+                                  return_state=True)
+    return _blockwise(q, k, v, pattern, block_q, block_k, scale)
+
+
+# ---------------------------------------------------------------------- #
+# The backward contract: shared host steps + the XLA gradient engines
+# ---------------------------------------------------------------------- #
+def p_from_stats(scores, mask, m, l):
+    """Recompute normalized attention probabilities from saved row stats:
+    ``p = exp(s - m) / l`` where ``s`` is the masked scaled score.
+
+    Empty rows — every step masked; the forward emitted ``(out=0,
+    m=NEG_INF, l=0)``, see :class:`repro.core.renorm.PartialState` — take
+    the guarded branch (shift 0, l 1) and end at exactly ``p == 0`` via the
+    mask, so their gradients vanish identically in every engine.
+    """
+    l_safe = jnp.where(l == 0.0, 1.0, l)
+    shift = jnp.where(m <= renorm.NEG_INF / 2, 0.0, m)
+    p = jnp.exp(scores - shift[..., None]) / l_safe[..., None]
+    return jnp.where(mask, p, 0.0)
+
+
+def bwd_dq_scan(dout, delta, m, l, qw, kw, vw, pos, *,
+                plan: ExecutionPlan, scale: float) -> jax.Array:
+    """dQ pass: one scan over the FORWARD step tables.
+
+    ds = p * (dout.v - delta);  dq_i += scale * sum_j ds_ij k_j
+    (all arrays working-space padded; returns (B, n_pad, D) f32).
+    """
+    B, n_pad, D = qw.shape
+    nq, bq, bk, nkb = plan.nq, plan.block_q, plan.block_k, plan.nkb
+    q_blk = qw.reshape(B, nq, bq, D)
+    do_blk = dout.reshape(B, nq, bq, D)
+    m_blk = m.reshape(B, nq, bq)
+    l_blk = l.reshape(B, nq, bq)
+    dl_blk = delta.reshape(B, nq, bq)
+    k_r = kw.reshape(B, nkb, bk, D)
+    v_r = vw.reshape(B, nkb, bk, D)
+    pos_q = pos.reshape(nq, bq)
+    pos_r = pos.reshape(nkb, bk)
+    table = jnp.asarray(plan.kv_blocks)
+    flags = jnp.asarray(plan.flags)
+
+    def body(dq, s):
+        blk = jax.lax.dynamic_index_in_dim(table, s, 1, keepdims=False)
+        fl = jax.lax.dynamic_index_in_dim(flags, s, 1, keepdims=False)
+        k_b = jnp.take(k_r, blk, axis=1)                       # (B,nq,Bk,D)
+        v_b = jnp.take(v_r, blk, axis=1)
+        pos_k = jnp.take(pos_r, blk, axis=0)                   # (nq, Bk)
+        scores = _dot(q_blk, k_b) * scale
+        mask = plan.step_mask(pos_q[:, :, None], pos_k[:, None, :],
+                              fl[:, None, None])[None]
+        p = p_from_stats(scores, mask, m_blk, l_blk)
+        ds = p * (_dot(do_blk, v_b) - dl_blk[..., None])
+        dq = dq + jnp.einsum("bnqk,bnkd->bnqd", ds,
+                             k_b.astype(jnp.float32)) * scale
+        return dq, ()
+
+    dq0 = jnp.zeros((B, nq, bq, D), jnp.float32)
+    dq, _ = jax.lax.scan(body, dq0,
+                         jnp.arange(plan.max_steps, dtype=jnp.int32))
+    return dq.reshape(B, n_pad, D)
+
+
+def bwd_dkv_scan(dout, delta, m, l, qw, kw, vw, pos, *,
+                 plan: ExecutionPlan, scale: float):
+    """dK/dV pass: one scan over the TRANSPOSED step tables
+    (``plan.transposed()``): each KV tile stays resident while the query
+    blocks that visited it stream past — the exact adjoint walk.
+
+    dv_j += sum_i p_ij dout_i;  dk_j += scale * sum_i ds_ij q_i
+    """
+    tp = plan.transposed()
+    B, n_pad, D = qw.shape
+    nq, bq, bk, nkb = plan.nq, plan.block_q, plan.block_k, plan.nkb
+    q_r = qw.reshape(B, nq, bq, D)
+    do_r = dout.reshape(B, nq, bq, D)
+    m_r = m.reshape(B, nq, bq)
+    l_r = l.reshape(B, nq, bq)
+    dl_r = delta.reshape(B, nq, bq)
+    k_blk = kw.reshape(B, nkb, bk, D)
+    v_blk = vw.reshape(B, nkb, bk, D)
+    pos_q_r = pos.reshape(nq, bq)
+    pos_k = pos.reshape(nkb, bk)
+    table = jnp.asarray(tp.q_blocks)
+    flags = jnp.asarray(tp.flags)
+
+    def body(carry, s):
+        dk, dv = carry
+        qb = jax.lax.dynamic_index_in_dim(table, s, 1, keepdims=False)
+        fl = jax.lax.dynamic_index_in_dim(flags, s, 1, keepdims=False)
+        q_b = jnp.take(q_r, qb, axis=1)                        # (B,nkb,Bq,D)
+        do_b = jnp.take(do_r, qb, axis=1)
+        m_b = jnp.take(m_r, qb, axis=1)
+        l_b = jnp.take(l_r, qb, axis=1)
+        dl_b = jnp.take(dl_r, qb, axis=1)
+        pos_qb = jnp.take(pos_q_r, qb, axis=0)                 # (nkb, Bq)
+        scores = _dot(q_b, k_blk) * scale
+        mask = plan.step_mask(pos_qb[:, :, None], pos_k[:, None, :],
+                              fl[:, None, None])[None]
+        p = p_from_stats(scores, mask, m_b, l_b)
+        ds = p * (_dot(do_b, v_blk) - dl_b[..., None])
+        dv = dv + jnp.einsum("bnqk,bnqd->bnkd", p, do_b)
+        dk = dk + jnp.einsum("bnqk,bnqd->bnkd", ds,
+                             q_b.astype(jnp.float32)) * scale
+        return (dk, dv), ()
+
+    z = jnp.zeros((B, nkb, bk, D), jnp.float32)
+    (dk, dv), _ = jax.lax.scan(body, (z, z),
+                               jnp.arange(tp.max_steps, dtype=jnp.int32))
+    return dk.reshape(B, n_pad, D), dv.reshape(B, n_pad, D)
+
+
+def plan_backward(g, q, k, v, out_w, m, l, plan: ExecutionPlan, scale: float,
+                  dq_engine, dkv_engine):
+    """THE backward contract of both engines: host-step adjoints around two
+    plan-walking gradient passes.
+
+    ``kernels/ops.py`` passes the Pallas launchers (kernels/salo_backward),
+    the blockwise custom VJP passes :func:`bwd_dq_scan`/:func:`bwd_dkv_scan`
+    — everything else (global-rows epilogue VJP, cotangent reorder/pad, the
+    ``delta`` precompute, gradient un-reordering) is this one code path.
+
+    Engines take ``(dout, delta, m, l, qw, kw, vw, pos)`` in the padded
+    working layout and return working-layout gradients.
+    """
+    sched = plan.sched
+    B, N, D = q.shape
+    # 1. Global-rows epilogue: the forward overwrote rows [:g] with the
+    #    dense g-row pass on ORIGINAL-order tensors; its VJP is dense but
+    #    tiny (g rows), and those rows' main-path cotangent is zeroed.
+    if sched.n_global > 0 and sched.global_rows:
+        ng = sched.n_global
+        _, rows_vjp = jax.vjp(
+            lambda q_, k_, v_: _global_rows(q_, k_, v_, sched, scale,
+                                            g.dtype), q, k, v)
+        dq_rows, dk_rows, dv_rows = rows_vjp(g[:, :ng])
+        g = g.at[:, :ng].set(0)
+    else:
+        dq_rows = dk_rows = dv_rows = None
+    # 2. The output reorder is a permutation: the cotangent takes the SAME
+    #    working-stream transform as the inputs did.
+    dout = working_stream(g, sched, plan).astype(jnp.float32)
+    qw = working_stream(q, sched, plan)
+    kw = working_stream(k, sched, plan)
+    vw = working_stream(v, sched, plan)
+    pos = jnp.asarray(plan.positions_padded())
+    # 3. delta = rowwise dout . out — the flash-backward precompute.
+    delta = jnp.sum(dout * out_w.astype(jnp.float32), axis=-1)
+    # 4. The two plan walks.
+    dq_w = dq_engine(dout, delta, m, l, qw, kw, vw, pos)
+    dk_w, dv_w = dkv_engine(dout, delta, m, l, qw, kw, vw, pos)
+    # 5. Back to original order (+ the epilogue contributions).
+    dq = undo_working(dq_w, sched, N)
+    dk = undo_working(dk_w, sched, N)
+    dv = undo_working(dv_w, sched, N)
+    if dq_rows is not None:
+        dq = dq + dq_rows
+        dk = dk + dk_rows
+        dv = dv + dv_rows
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
 
 
 # ---------------------------------------------------------------------- #

@@ -28,7 +28,19 @@ NEG_INF = -1e30  # large-negative instead of -inf: keeps 0*inf NaNs away
 
 class PartialState(NamedTuple):
     """Partial attention for a block of queries. Shapes:
-    acc: (..., q, d) f32, m: (..., q) f32, l: (..., q) f32."""
+    acc: (..., q, d) f32, m: (..., q) f32, l: (..., q) f32.
+
+    **Empty-row contract.** A row that attended nothing carries exactly
+    ``(acc=0, m=NEG_INF, l=0)`` — the identity element of :func:`merge` —
+    and finalizes to a zero output row. Every producer keeps this
+    normalized form (``empty_state``, ``update``'s guarded shift, the
+    Pallas kernel's ``_fin``), and every consumer must branch on
+    ``l == 0`` / ``m <= NEG_INF/2`` rather than divide or exponentiate
+    blindly: :func:`finalize` and :func:`weights` here, and the fused
+    backward's ``p = exp(s - m)/l`` recompute + ``delta`` term
+    (``core.blockwise.p_from_stats``, kernels/salo_backward.py), which all
+    yield exactly zero for such rows.
+    """
     acc: jax.Array
     m: jax.Array
     l: jax.Array

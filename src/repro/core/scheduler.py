@@ -28,7 +28,12 @@ launch / one scan) instead of one launch per band plus global special cases.
 This mirrors SALO's scheduler packing band segments so global PEs compute
 "simultaneously with the same input vectors" as the window PEs.
 
-Both levels are pure static metadata (numpy only) — safe to build at trace
+**TransposedPlan** (the backward IR): the same deduplicated visits regrouped
+into per-KV-block step tables (``plan.transposed()``), walked by the dK/dV
+backward kernel; the dQ backward kernel replays the forward tables. Gradients
+ride the paper's data-scheduler schedule symmetrically — no extra tiles.
+
+All levels are pure static metadata (numpy only) — safe to build at trace
 time and cache.
 """
 from __future__ import annotations
@@ -310,6 +315,11 @@ class ExecutionPlan:
     def step_mask(self, pos_i, pos_j, flags):
         return self.sched.step_mask(pos_i, pos_j, flags)
 
+    def transposed(self) -> "TransposedPlan":
+        """The adjoint walk: per-KV-block step tables (cached, see
+        :func:`build_transposed`). The dK/dV backward kernel's schedule."""
+        return build_transposed(self)
+
     # ------------------------------------------------------------------ #
     def stats(self) -> dict:
         """Plan-level work accounting, fused vs the per-band-launch walk."""
@@ -326,6 +336,7 @@ class ExecutionPlan:
             per_band_steps += -(-g // self.block_k)
         per_band_tiles = self.nq * per_band_steps
         per_band_launches = len(self.sched.bands)
+        tp = self.transposed()
         return dict(
             q_blocks=self.nq,
             kv_steps_per_q_block=self.max_steps,
@@ -338,6 +349,13 @@ class ExecutionPlan:
             per_band_launches=per_band_launches,
             launches=1,
             band_sets=len(self.band_sets),
+            # Backward accounting: dQ replays the forward tables, dK/dV
+            # walks the transposed tables — same deduplicated tile set,
+            # regrouped by KV block, in exactly two launches.
+            bwd_dq_tiles=executed_tiles,
+            bwd_dkv_tiles=int(tp.num_steps.sum()),
+            bwd_kv_steps_per_kv_block=tp.max_steps,
+            bwd_launches=2,
         )
 
 
@@ -407,3 +425,65 @@ def build_plan(sched: BandSchedule, block_q: int,
         nkb=nkb, max_steps=max_steps, kv_blocks=kv_blocks, flags=flags,
         band_set_ids=band_set_ids, band_sets=tuple(band_sets),
         num_steps=num_steps)
+
+
+# ---------------------------------------------------------------------- #
+# TransposedPlan IR — the backward's dK/dV schedule
+# ---------------------------------------------------------------------- #
+@dataclasses.dataclass(frozen=True, eq=False)
+class TransposedPlan:
+    """Per-KV-block step tables: the exact adjoint of an ExecutionPlan.
+
+    Row ``j`` lists the query blocks whose forward walk visits KV tile
+    ``j``, in ascending block order, each block exactly once (the forward
+    dedup carries over: (q_block, kv_tile) appears in the forward tables
+    at most once, hence here at most once too):
+
+    * ``q_blocks[j, s]`` — query block of step ``s`` (0 for padding steps);
+    * ``flags[j, s]``    — the SAME ``STEP_WINDOW | STEP_GLOBAL`` bitmask
+      the forward visit carried (0 = padding no-op — every mask term
+      evaluates False, identical to the forward padding contract);
+    * ``num_steps[j]``   — real (non-padding) steps of row ``j``.
+
+    Rows are right-padded to ``max_steps`` (the dK/dV kernel grid's
+    sequential dimension). Total real steps equal the forward plan's
+    ``executed_tiles`` exactly — the backward re-walks the deduplicated
+    tile set, regrouped by KV block, never a superset.
+    """
+    plan: ExecutionPlan
+    max_steps: int
+    q_blocks: np.ndarray   # (nkb, max_steps) int32
+    flags: np.ndarray      # (nkb, max_steps) int32
+    num_steps: np.ndarray  # (nkb,) int32
+
+    def __hash__(self):
+        return hash(("transposed", self.plan))
+
+    def __eq__(self, other):
+        return isinstance(other, TransposedPlan) and self.plan == other.plan
+
+
+@functools.lru_cache(maxsize=256)
+def build_transposed(plan: ExecutionPlan) -> TransposedPlan:
+    """Transpose the forward step tables into per-KV-block tables.
+
+    Pure table surgery — no re-derivation from bands, so the transposed
+    walk is the adjoint of what the forward *actually executed* by
+    construction (same visits, same flags, regrouped by KV tile).
+    """
+    rows: list = [[] for _ in range(plan.nkb)]
+    for i in range(plan.nq):
+        for s in range(int(plan.num_steps[i])):
+            fl = int(plan.flags[i, s])
+            if fl:  # real forward steps always carry flags; paranoia guard
+                rows[int(plan.kv_blocks[i, s])].append((i, fl))
+    max_steps = max(1, max(len(r) for r in rows))
+    q_blocks = np.zeros((plan.nkb, max_steps), dtype=np.int32)
+    flags = np.zeros((plan.nkb, max_steps), dtype=np.int32)
+    num_steps = np.asarray([len(r) for r in rows], dtype=np.int32)
+    for j, row in enumerate(rows):
+        for s, (i, fl) in enumerate(row):  # ascending i: outer loop order
+            q_blocks[j, s] = i
+            flags[j, s] = fl
+    return TransposedPlan(plan=plan, max_steps=max_steps, q_blocks=q_blocks,
+                          flags=flags, num_steps=num_steps)

@@ -1,17 +1,26 @@
-"""jit'd wrapper around the SALO Pallas kernel — ONE launch per forward.
+"""jit'd wrapper around the SALO Pallas kernels — fully kernel-driven
+forward AND backward.
 
 The lowering pipeline (core/scheduler.py): pattern -> BandSchedule ->
 ExecutionPlan. This wrapper only does what a host must:
 
-1. data reordering (dilation) on the host side of the kernel,
-2. padding to the plan's tile grid,
-3. ONE ``pallas_call`` executing the plan's step tables — every band and the
+1. data reordering (dilation) + padding to the plan's tile grid
+   (``core.blockwise.working_stream`` — shared with the XLA engine),
+2. ONE ``pallas_call`` executing the plan's step tables — every band and the
    global column fused, exactly as the paper's scheduler drives the array,
-4. global rows (global queries attend everything) as a tiny g-row dense
+3. global rows (global queries attend everything) as a tiny g-row dense
    epilogue (not a kernel launch),
-5. custom_vjp: backward = autodiff of the algorithmic twin
-   (`core.blockwise`), which walks the SAME plan and recomputes activations
-   flash-style (no O(n^2) residuals live).
+4. custom_vjp: the forward saves the kernel's already-emitted partial
+   triple ``(out, m, l)`` as residuals, and the backward is exactly TWO
+   plan-walking launches (kernels/salo_backward.py): dQ over the forward
+   tables, dK/dV over the transposed tables, with ``p`` recomputed
+   flash-style from the residuals — no forward re-run, no O(n^2) storage.
+   Host-step adjoints (reorder/pad/global rows, the ``delta`` precompute)
+   are the shared ``core.blockwise.plan_backward`` contract. When compiled
+   (non-interpret) kernels are requested on a non-TPU backend — where the
+   Pallas forward itself cannot execute — BOTH directions degrade to the
+   XLA twin (blockwise forward + scan gradient engines): same plan walk,
+   same residual contract, still no forward recompute in the VJP.
 """
 from __future__ import annotations
 
@@ -21,10 +30,14 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.blockwise import blockwise_attention, _global_rows
+from repro.core.blockwise import (_blockwise_forward, _global_rows,
+                                  bwd_dkv_scan, bwd_dq_scan, plan_backward,
+                                  undo_working, working_stream)
 from repro.core.patterns import HybridSparsePattern
 from repro.core.scheduler import schedule
 from repro.kernels.salo_attention import salo_plan_attention
+from repro.kernels.salo_backward import (salo_plan_backward_dq,
+                                         salo_plan_backward_dkv)
 
 
 @functools.partial(jax.custom_vjp,
@@ -35,67 +48,74 @@ def salo_attention(q: jax.Array, k: jax.Array, v: jax.Array,
                    scale: Optional[float] = None,
                    interpret: bool = False) -> jax.Array:
     """Hybrid sparse attention via the Pallas kernel. q/k/v: (B, N, D)."""
-    return _forward(q, k, v, pattern, block_q, block_k, scale, interpret)
+    out, _ = _forward(q, k, v, pattern, block_q, block_k, scale, interpret)
+    return out
+
+
+def _use_fallback(interpret):
+    """Compiled (non-interpret) Pallas TPU kernels only execute on TPU;
+    everywhere else the XLA twin stands in (same plan, same residuals)."""
+    return not interpret and jax.default_backend() != "tpu"
 
 
 def _forward(q, k, v, pattern, block_q, block_k, scale, interpret):
+    """One fused launch + host steps. Returns ``(out, (out_w, m, l))`` —
+    the kernel's working-space partial triple, kept as backward residuals
+    instead of being thrown away."""
+    if _use_fallback(interpret):
+        return _blockwise_forward(q, k, v, pattern, block_q, block_k, scale)
     B, N, D = q.shape
     scale_ = (D ** -0.5) if scale is None else scale
     sched = schedule(pattern, N)
     plan = sched.plan(block_q, block_k)
     out_dtype = q.dtype
 
-    # --- data reordering (paper §4.2) ----------------------------------- #
-    if sched.reordered:
-        perm = jnp.asarray(sched.perm)
-        take = jnp.clip(perm, 0, N - 1)
-        valid = (perm < N)[None, :, None]
-        qw = jnp.where(valid, jnp.take(q, take, axis=1), 0)
-        kw = jnp.where(valid, jnp.take(k, take, axis=1), 0)
-        vw = jnp.where(valid, jnp.take(v, take, axis=1), 0)
-    else:
-        qw, kw, vw = q, k, v
-
-    pad = plan.n_pad - qw.shape[1]
-    if pad:
-        qw = jnp.pad(qw, ((0, 0), (0, pad), (0, 0)))
-        kw = jnp.pad(kw, ((0, 0), (0, pad), (0, 0)))
-        vw = jnp.pad(vw, ((0, 0), (0, pad), (0, 0)))
+    # --- data reordering (paper §4.2) + tile-grid padding ---------------- #
+    qw = working_stream(q, sched, plan)
+    kw = working_stream(k, sched, plan)
+    vw = working_stream(v, sched, plan)
     pos = jnp.asarray(plan.positions_padded())
 
     # --- the single table-driven launch --------------------------------- #
-    # (m, l) are emitted for cross-device merges; the full pattern is one
-    # launch, so `out` is already the normalized result.
-    out, _m, _l = salo_plan_attention(qw, kw, vw, pos, plan=plan,
+    # The full pattern is one launch, so `out_w` is already normalized;
+    # (m, l) feed cross-device merges AND the fused backward.
+    out_w, m, l = salo_plan_attention(qw, kw, vw, pos, plan=plan,
                                       scale=scale_, interpret=interpret)
-    out = out.astype(out_dtype)
+    out_w = out_w.astype(out_dtype)
 
-    if sched.reordered:
-        inv = jnp.asarray(sched.inverse_perm())
-        out = jnp.take(out, inv, axis=1)
-    else:
-        out = out[:, :N]
+    out = undo_working(out_w, sched, N)
 
     if sched.n_global > 0 and sched.global_rows:
         rows = _global_rows(q, k, v, sched, scale_, out_dtype)
         out = out.at[:, : sched.n_global].set(rows)
-    return out
+    return out, (out_w, m, l)
 
 
 def _fwd(q, k, v, pattern, block_q, block_k, scale, interpret):
-    out = _forward(q, k, v, pattern, block_q, block_k, scale, interpret)
-    return out, (q, k, v)
+    out, (out_w, m, l) = _forward(q, k, v, pattern, block_q, block_k, scale,
+                                  interpret)
+    return out, (q, k, v, out_w, m, l)
 
 
 def _bwd(pattern, block_q, block_k, scale, interpret, res, g):
-    q, k, v = res
-    # Backward through the algorithmic twin: identical plan walk,
-    # autodiffable, flash-style memory (recompute, no n^2 residuals).
-    _, vjp = jax.vjp(
-        lambda q_, k_, v_: blockwise_attention(
-            q_, k_, v_, pattern, block_q=block_q, block_k=block_k,
-            scale=scale), q, k, v)
-    return vjp(g)
+    q, k, v, out_w, m, l = res
+    B, N, D = q.shape
+    scale_ = (D ** -0.5) if scale is None else scale
+    plan = schedule(pattern, N).plan(block_q, block_k)
+    if _use_fallback(interpret):
+        # The forward ran on the XLA twin (same residual contract); run the
+        # blockwise (XLA scan) gradient engines too — same plan walk, same
+        # residual reuse, same plan_backward contract, no forward recompute.
+        dq_engine = functools.partial(bwd_dq_scan, plan=plan, scale=scale_)
+        dkv_engine = functools.partial(bwd_dkv_scan, plan=plan, scale=scale_)
+    else:
+        # Exactly two launches: dQ (forward tables), dK/dV (transposed).
+        dq_engine = functools.partial(salo_plan_backward_dq, plan=plan,
+                                      scale=scale_, interpret=interpret)
+        dkv_engine = functools.partial(salo_plan_backward_dkv, plan=plan,
+                                       scale=scale_, interpret=interpret)
+    return plan_backward(g, q, k, v, out_w, m, l, plan, scale_,
+                         dq_engine, dkv_engine)
 
 
 salo_attention.defvjp(_fwd, _bwd)

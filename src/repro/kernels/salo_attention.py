@@ -28,7 +28,11 @@ sequential ("arbitrary"), the first two parallel. Padding steps (flags == 0)
 mask to nothing and leave the accumulator untouched.
 
 The kernel emits the *partial state* (normalized out, m, l) so cross-device
-sequence parallelism can still merge outputs with `core.renorm.merge`.
+sequence parallelism can still merge outputs with `core.renorm.merge` AND so
+the fused backward (kernels/salo_backward.py) can recompute attention
+probabilities from it instead of re-running the forward. Empty rows follow
+the renorm.PartialState contract: (out=0, m=NEG_INF, l=0) — the merge
+identity, and exactly zero gradient through the backward's guards.
 """
 from __future__ import annotations
 
@@ -96,6 +100,14 @@ def _kernel(kvt_ref, flg_ref,                           # scalar prefetch
     # ---- finalize on the last sequential step ---------------------------- #
     @pl.when(s == steps - 1)
     def _fin():
+        # Empty-row contract (shared with renorm.PartialState): a row whose
+        # EVERY step masked to nothing — tile-grid padding, or a pattern
+        # row with no reachable key — emits exactly (out=0, m=NEG_INF,
+        # l=0), the identity element of renorm.merge. The l == 0 guard
+        # below only protects the normalization; m is deliberately left at
+        # NEG_INF so merges keep zero weight and the fused backward's
+        # p-recompute / delta term (kernels/salo_backward.py) sees the
+        # same guarded branch and yields exactly zero gradients.
         l = l_scr[...][:, :1]
         l_safe = jnp.where(l == 0.0, 1.0, l)
         out_ref[0] = (acc_ref[...] / l_safe).astype(out_ref.dtype)

@@ -1,0 +1,267 @@
+"""Fused table-driven backward: flash-style dQ and dK/dV Pallas kernels.
+
+The gradient counterpart of :mod:`repro.kernels.salo_attention` — SALO's
+data-scheduler insight applied symmetrically to training. Exactly TWO
+scalar-prefetch launches per backward, both recomputing the attention
+probabilities from the forward's saved partial triple ``(out, m, l)``
+(``p = exp(s - m) / l``) instead of re-running the forward:
+
+* **dQ kernel** — replays the FORWARD plan (grid ``(B, nq, max_steps)``):
+  the query tile, its cotangent and row stats stay resident while the
+  plan's deduplicated KV tiles stream past, accumulating
+  ``dq_i += scale * sum_j ds_ij k_j`` with ``ds = p * (dout.v - delta)``.
+* **dK/dV kernel** — walks the TRANSPOSED plan
+  (:meth:`ExecutionPlan.transposed`, grid ``(B, nkb, max_steps_t)``): each
+  KV tile stays resident while the query blocks that visited it stream
+  past, accumulating ``dv_j += sum_i p_ij dout_i`` and
+  ``dk_j += scale * sum_i ds_ij q_i``. The transposed tables are the exact
+  adjoint regrouping of the forward's deduplicated visits — same total
+  tiles, no extra work.
+
+The ``delta = sum(dout * out)`` rowwise precompute and every host-step
+adjoint (global rows, reorder, pad) live in
+:func:`repro.core.blockwise.plan_backward` — ONE backward contract shared
+with the XLA scan engines; these kernels are its Pallas instantiation
+(wired up in :mod:`repro.kernels.ops`).
+
+Masking/padding follow the forward contract: per-step flags gate the union
+mask, ``flags == 0`` steps (table padding) mask to nothing and leave the
+accumulators untouched, and empty rows (``l == 0``, ``m == NEG_INF`` —
+see :class:`repro.core.renorm.PartialState`) produce exactly zero
+gradients via the guarded ``p`` recompute.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.compat import tpu_compiler_params
+from repro.core.renorm import NEG_INF
+from repro.core.scheduler import ExecutionPlan
+
+
+def _p_ds(scores, mask, m_row, l_row, dp, delta):
+    """Recomputed probabilities + score gradient (the in-kernel twin of
+    ``core.blockwise.p_from_stats``). Guarded so empty rows (l == 0,
+    m == NEG_INF) contribute exactly zero."""
+    l_safe = jnp.where(l_row == 0.0, 1.0, l_row)
+    shift = jnp.where(m_row <= NEG_INF / 2, 0.0, m_row)
+    p = jnp.exp(scores - shift[:, None]) / l_safe[:, None]
+    p = jnp.where(mask, p, 0.0)
+    ds = p * (dp - delta[:, None])
+    return p, ds
+
+
+def _dq_kernel(kvt_ref, flg_ref,                                # prefetch
+               pos_q_ref, pos_k_ref, q_ref, k_ref, v_ref,       # inputs
+               do_ref, m_ref, l_ref, delta_ref,
+               dq_ref,                                          # output
+               acc_ref,                                         # scratch
+               *, plan: ExecutionPlan, scale: float):
+    i = pl.program_id(1)
+    s = pl.program_id(2)
+    steps = plan.max_steps
+
+    @pl.when(s == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0]                                     # (Bq, D)
+    k = k_ref[0]                                     # (Bk, D)
+    v = v_ref[0]
+    do = do_ref[0].astype(jnp.float32)               # (Bq, D)
+    scores = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale  # (Bq, Bk)
+
+    fl = flg_ref[i * steps + s]
+    mask = plan.step_mask(pos_q_ref[0][:, None], pos_k_ref[0][None, :], fl)
+    dp = jax.lax.dot_general(
+        do, v.astype(jnp.float32), (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)          # (Bq, Bk)
+    _, ds = _p_ds(scores, mask, m_ref[0], l_ref[0], dp, delta_ref[0])
+
+    acc_ref[...] += jax.lax.dot_general(
+        ds, k.astype(jnp.float32), (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale  # (Bq, D)
+
+    @pl.when(s == steps - 1)
+    def _fin():
+        dq_ref[0] = acc_ref[...].astype(dq_ref.dtype)
+
+
+def _dkv_kernel(qbt_ref, flg_ref,                               # prefetch
+                pos_k_ref, pos_q_ref, q_ref, k_ref, v_ref,      # inputs
+                do_ref, m_ref, l_ref, delta_ref,
+                dk_ref, dv_ref,                                 # outputs
+                dk_acc, dv_acc,                                 # scratch
+                *, plan: ExecutionPlan, scale: float):
+    j = pl.program_id(1)
+    s = pl.program_id(2)
+    steps = plan.transposed().max_steps
+
+    @pl.when(s == 0)
+    def _init():
+        dk_acc[...] = jnp.zeros_like(dk_acc)
+        dv_acc[...] = jnp.zeros_like(dv_acc)
+
+    q = q_ref[0]                                     # (Bq, D)
+    k = k_ref[0]                                     # (Bk, D) resident
+    v = v_ref[0]
+    do = do_ref[0].astype(jnp.float32)
+    scores = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale  # (Bq, Bk)
+
+    fl = flg_ref[j * steps + s]
+    mask = plan.step_mask(pos_q_ref[0][:, None], pos_k_ref[0][None, :], fl)
+    dp = jax.lax.dot_general(
+        do, v.astype(jnp.float32), (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    p, ds = _p_ds(scores, mask, m_ref[0], l_ref[0], dp, delta_ref[0])
+
+    # Contract over the streaming query dimension: p^T dout and ds^T q.
+    dv_acc[...] += jax.lax.dot_general(
+        p, do, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)          # (Bk, D)
+    dk_acc[...] += jax.lax.dot_general(
+        ds, q.astype(jnp.float32), (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale
+
+    @pl.when(s == steps - 1)
+    def _fin():
+        dk_ref[0] = dk_acc[...].astype(dk_ref.dtype)
+        dv_ref[0] = dv_acc[...].astype(dv_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("plan", "scale", "interpret"))
+def salo_plan_backward_dq(dout, delta, m, l, q, k, v, pos, *,
+                          plan: ExecutionPlan, scale: float,
+                          interpret: bool = False) -> jax.Array:
+    """dQ in ONE launch over the forward plan. All arrays working-space
+    padded: q/k/v/dout (B, n_pad, D); delta/m/l (B, n_pad); pos (n_pad,).
+    """
+    B, n_pad, D = q.shape
+    assert n_pad == plan.n_pad, (n_pad, plan.n_pad)
+    bq, bk = plan.block_q, plan.block_k
+    nq, nkb, steps = plan.nq, plan.nkb, plan.max_steps
+
+    kvt = jnp.asarray(plan.kv_blocks.reshape(-1))    # (nq*steps,) int32
+    flg = jnp.asarray(plan.flags.reshape(-1))
+    pos_q = pos.reshape(nq, bq)
+    pos_k = pos.reshape(nkb, bk)
+
+    def q_idx(b, i, s, kvt_ref, flg_ref):
+        return (b, i, 0)
+
+    def kv_idx(b, i, s, kvt_ref, flg_ref):
+        return (b, kvt_ref[i * steps + s], 0)
+
+    def row_idx(b, i, s, kvt_ref, flg_ref):
+        return (b, i)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, nq, steps),
+        in_specs=[
+            pl.BlockSpec((1, bq),
+                         lambda b, i, s, kvt_ref, flg_ref: (i, 0)),  # pos_q
+            pl.BlockSpec((1, bk),
+                         lambda b, i, s, kvt_ref, flg_ref:
+                         (kvt_ref[i * steps + s], 0)),               # pos_k
+            pl.BlockSpec((1, bq, D), q_idx),                         # q
+            pl.BlockSpec((1, bk, D), kv_idx),                        # k
+            pl.BlockSpec((1, bk, D), kv_idx),                        # v
+            pl.BlockSpec((1, bq, D), q_idx),                         # dout
+            pl.BlockSpec((1, bq), row_idx),                          # m
+            pl.BlockSpec((1, bq), row_idx),                          # l
+            pl.BlockSpec((1, bq), row_idx),                          # delta
+        ],
+        out_specs=pl.BlockSpec((1, bq, D), q_idx),
+        scratch_shapes=[pltpu.VMEM((bq, D), jnp.float32)],
+    )
+
+    kern = functools.partial(_dq_kernel, plan=plan, scale=scale)
+    return pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, n_pad, D), q.dtype),
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+        name="salo_plan_backward_dq",
+    )(kvt, flg, pos_q, pos_k, q, k, v, dout, m, l, delta)
+
+
+@functools.partial(jax.jit, static_argnames=("plan", "scale", "interpret"))
+def salo_plan_backward_dkv(dout, delta, m, l, q, k, v, pos, *,
+                           plan: ExecutionPlan, scale: float,
+                           interpret: bool = False):
+    """dK and dV in ONE launch over the transposed plan. Returns
+    ``(dk, dv)``, both (B, n_pad, D) working-space padded."""
+    B, n_pad, D = q.shape
+    assert n_pad == plan.n_pad, (n_pad, plan.n_pad)
+    bq, bk = plan.block_q, plan.block_k
+    nq, nkb = plan.nq, plan.nkb
+    tp = plan.transposed()
+    steps = tp.max_steps
+
+    qbt = jnp.asarray(tp.q_blocks.reshape(-1))       # (nkb*steps,) int32
+    flg = jnp.asarray(tp.flags.reshape(-1))
+    pos_q = pos.reshape(nq, bq)
+    pos_k = pos.reshape(nkb, bk)
+
+    def kv_idx(b, j, s, qbt_ref, flg_ref):
+        return (b, j, 0)
+
+    def q_idx(b, j, s, qbt_ref, flg_ref):
+        return (b, qbt_ref[j * steps + s], 0)
+
+    def row_idx(b, j, s, qbt_ref, flg_ref):
+        return (b, qbt_ref[j * steps + s])
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, nkb, steps),
+        in_specs=[
+            pl.BlockSpec((1, bk),
+                         lambda b, j, s, qbt_ref, flg_ref: (j, 0)),  # pos_k
+            pl.BlockSpec((1, bq),
+                         lambda b, j, s, qbt_ref, flg_ref:
+                         (qbt_ref[j * steps + s], 0)),               # pos_q
+            pl.BlockSpec((1, bq, D), q_idx),                         # q
+            pl.BlockSpec((1, bk, D), kv_idx),                        # k
+            pl.BlockSpec((1, bk, D), kv_idx),                        # v
+            pl.BlockSpec((1, bq, D), q_idx),                         # dout
+            pl.BlockSpec((1, bq), row_idx),                          # m
+            pl.BlockSpec((1, bq), row_idx),                          # l
+            pl.BlockSpec((1, bq), row_idx),                          # delta
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bk, D), kv_idx),
+            pl.BlockSpec((1, bk, D), kv_idx),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((bk, D), jnp.float32),        # dk accumulator
+            pltpu.VMEM((bk, D), jnp.float32),        # dv accumulator
+        ],
+    )
+
+    kern = functools.partial(_dkv_kernel, plan=plan, scale=scale)
+    dk, dv = pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((B, n_pad, D), k.dtype),
+            jax.ShapeDtypeStruct((B, n_pad, D), v.dtype),
+        ],
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+        name="salo_plan_backward_dkv",
+    )(qbt, flg, pos_k, pos_q, q, k, v, dout, m, l, delta)
+    return dk, dv
