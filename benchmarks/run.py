@@ -18,7 +18,7 @@ def main() -> None:
                     help="skip the slow measured-speedup benchmarks")
     args = ap.parse_args()
 
-    from benchmarks import paper_claims, plan_stats
+    from benchmarks import paper_claims, plan_stats, serve_stats
 
     rows = []
     paper_claims.sec63_sanger_comparison(rows)
@@ -27,6 +27,8 @@ def main() -> None:
     plan_stats.plan_benchmark(rows, measure=not args.quick)
     # Backward: fwd-plan dQ vs transposed-plan dK/dV vs dense (BENCH_bwd.json)
     plan_stats.bwd_benchmark(rows, measure=not args.quick)
+    # Serving: continuous batching vs lockstep (BENCH_serve.json)
+    serve_stats.serve_benchmark(rows, measure=not args.quick)
     if not args.quick:
         paper_claims.fig7_speedup(rows)
         paper_claims.sec21_quadratic_scaling(rows)
@@ -61,6 +63,26 @@ def main() -> None:
         # scan-autodiff's temp memory (measured 3.2-9.1x on these workloads)
         if k.startswith("bwd/") and k.endswith("bwd_mem_ratio") and v < 2.0:
             failures.append((k, v, ">= 2.0 (fused bwd temp memory win)"))
+    # serving gates: chunked prefill must hit the launch contract EXACTLY
+    # (ceil(P/chunk) fused launches per prompt, counted by the engine), the
+    # continuous engine must be token-exact vs lockstep, and the paged slab
+    # must beat the dense long-context cache by a wide margin
+    if "serve/prefill_launch_ratio" in d and \
+            abs(d["serve/prefill_launch_ratio"] - 1.0) > 1e-9:
+        failures.append(("serve_prefill_launches",
+                         d["serve/prefill_launch_ratio"],
+                         "== 1.0 (counted == ceil(P/chunk))"))
+    if "serve/greedy_parity" in d and d["serve/greedy_parity"] != 1.0:
+        failures.append(("serve_greedy_parity", d["serve/greedy_parity"],
+                         "== 1.0 (token-exact vs lockstep)"))
+    if "serve/cache_bytes_ratio" in d and d["serve/cache_bytes_ratio"] < 10:
+        failures.append(("serve_cache_bytes", d["serve/cache_bytes_ratio"],
+                         ">= 10 (paged slab vs dense 32k cache)"))
+    if "serve/decode_launch_reduction" in d and \
+            d["serve/decode_launch_reduction"] <= 1.0:
+        failures.append(("serve_decode_launches",
+                         d["serve/decode_launch_reduction"],
+                         "> 1.0 (ragged batching shares launches)"))
     if failures:
         for f in failures:
             print(f"CHECK-FAILED: {f}", file=sys.stderr)

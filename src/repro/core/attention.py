@@ -90,19 +90,26 @@ def hybrid_decode_attention(q: jax.Array, k_cache: jax.Array,
                             scale: Optional[float] = None,
                             cache_positions=None,
                             slice_window: bool = False) -> jax.Array:
-    """Single-token decode. q: (B, H, 1, D); caches: (B, Hkv, S, D).
+    """Single-token decode — ragged aware. q: (B, H, 1, D); caches:
+    (B, Hkv, S, D); ``t``: scalar position (lockstep batch) OR a (B,)
+    vector — one position per request, so a single call serves a
+    continuous batch whose members sit at different depths.
+    ``cache_positions``: (S,) shared slots or (B, S) per-request slots
+    (the paged ring-cache view).
 
     GQA is computed with a grouped einsum — KV heads are NEVER repeated
     (a `jnp.repeat` materializes rep x the cache and breaks seq-sharding
-    propagation under pjit; see EXPERIMENTS.md §Perf granite/long_500k).
+    propagation under pjit).
 
     ``slice_window=True`` (SALO windowed decode): read only the last
     ``window`` cache slots + the global-token prefix instead of the whole
     sequence — O(w) instead of O(n) HBM traffic per step, the serving-side
     payoff of the paper's pattern. Requires the slot==position cache layout
-    (``cache_positions is None``).
+    (``cache_positions is None``) and a lockstep scalar ``t``.
     """
     from repro.core import renorm
+    from repro.core.scheduler import (STEP_GLOBAL, STEP_WINDOW,
+                                      causal_step_mask)
 
     B, H, _, D = q.shape
     Hkv, S = k_cache.shape[1], k_cache.shape[2]
@@ -112,31 +119,30 @@ def hybrid_decode_attention(q: jax.Array, k_cache: jax.Array,
     p = pattern
     a, _b = p.window
     g = p.n_global
+    ragged_t = jnp.ndim(t) > 0
 
     def grouped(kc, vc, pos_k, extra_mask=None):
-        """kc/vc: (B, Hkv, L, D); pos_k: (L,) -> (scores-masked) out parts."""
+        """kc/vc: (B, Hkv, L, D); pos_k: (L,) or (B, L) -> masked scores."""
         s = jnp.einsum("bgrd,bgsd->bgrs", qg, kc,
                        preferred_element_type=jnp.float32) * scale_
-        pos_i = jnp.asarray(t, jnp.int32)
-        rel = pos_k - pos_i
-        m = (rel >= a) & (rel <= 0)  # decode: lookback window only
-        if p.dilation > 1:
-            m = m & (rel % p.dilation == 0)
-        if g > 0:
-            m = m | (pos_k < g)
-        m = m & (pos_k <= pos_i)  # decode is causal
+        L = kc.shape[2]
+        pos_i = jnp.broadcast_to(jnp.asarray(t, jnp.int32), (B,))
+        pos_kb = jnp.broadcast_to(jnp.asarray(pos_k, jnp.int32), (B, L))
+        m = causal_step_mask(p, pos_i[:, None], pos_kb,
+                             STEP_WINDOW | STEP_GLOBAL)        # (B, L)
         if extra_mask is not None:
             m = m & extra_mask
-        return jnp.where(m[None, None, None, :], s, renorm.NEG_INF)
+        return jnp.where(m[:, None, None, :], s, renorm.NEG_INF)
 
-    if slice_window and cache_positions is None and a > -(1 << 29):
+    if slice_window and cache_positions is None and a > -(1 << 29) \
+            and not ragged_t:
         w = -a + 1
         L = min(S, w)
         start = jnp.clip(jnp.asarray(t, jnp.int32) - (L - 1), 0, S - L)
         k_win = jax.lax.dynamic_slice_in_dim(k_cache, start, L, axis=2)
         v_win = jax.lax.dynamic_slice_in_dim(v_cache, start, L, axis=2)
         pos_win = start + jnp.arange(L, dtype=jnp.int32)
-        parts_k, parts_v, parts_s = [k_win], [v_win], []
+        parts_v, parts_s = [v_win], []
         s_win = grouped(k_win, v_win, pos_win)
         parts_s.append(s_win)
         if g > 0:
@@ -148,7 +154,6 @@ def hybrid_decode_attention(q: jax.Array, k_cache: jax.Array,
             s_sink = grouped(k_sink, v_sink, pos_sink,
                              extra_mask=pos_sink < start)
             parts_s.insert(0, s_sink)
-            parts_k.insert(0, k_sink)
             parts_v.insert(0, v_sink)
         s = jnp.concatenate(parts_s, axis=-1)
         vc = jnp.concatenate(parts_v, axis=2)
@@ -160,3 +165,36 @@ def hybrid_decode_attention(q: jax.Array, k_cache: jax.Array,
     wts = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bgrs,bgsd->bgrd", wts, vc.astype(wts.dtype))
     return out.astype(q.dtype).reshape(B, H, 1, D)
+
+
+def hybrid_chunk_attention(q: jax.Array, k_view: jax.Array,
+                           v_view: jax.Array, pos_q: jax.Array,
+                           pos_k: jax.Array, kv_blocks: jax.Array,
+                           flags: jax.Array, pattern, *,
+                           scale: Optional[float] = None) -> jax.Array:
+    """Chunked-prefill attention (model-facing layout): one fused pass of a
+    prompt chunk against the request's paged KV view + the chunk itself.
+
+    q: (B, H, Cp, D); k_view/v_view: (B, Hkv, Vp, D); pos_q: (B, Cp);
+    pos_k: (B, Vp) original positions; kv_blocks/flags: (nq, W) ChunkPlan
+    step tables. GQA via no-copy broadcast (same rule as the training
+    path). Returns (B, H, Cp, D).
+    """
+    from repro.core.blockwise import chunk_attention
+
+    B, H, Cp, D = q.shape
+    Hkv, Vp = k_view.shape[1], k_view.shape[2]
+    rep = H // Hkv
+    if Hkv != H:
+        k_view = jnp.broadcast_to(k_view[:, :, None],
+                                  (B, Hkv, rep, Vp, D)).reshape(B, H, Vp, D)
+        v_view = jnp.broadcast_to(v_view[:, :, None],
+                                  (B, Hkv, rep, Vp, D)).reshape(B, H, Vp, D)
+    qf = q.reshape(B * H, Cp, D)
+    kf = k_view.reshape(B * H, Vp, D)
+    vf = v_view.reshape(B * H, Vp, D)
+    pos_qf = jnp.broadcast_to(pos_q[:, None], (B, H, Cp)).reshape(B * H, Cp)
+    pos_kf = jnp.broadcast_to(pos_k[:, None], (B, H, Vp)).reshape(B * H, Vp)
+    out = chunk_attention(qf, kf, vf, pos_qf, pos_kf, kv_blocks, flags,
+                          pattern, scale=scale)
+    return out.reshape(B, H, Cp, D)

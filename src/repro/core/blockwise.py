@@ -44,8 +44,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import renorm
-from repro.core.scheduler import (BIG, STEP_WINDOW, BandSchedule,
-                                  ExecutionPlan, _round_up, schedule)
+from repro.core.scheduler import (BIG, STEP_GLOBAL, STEP_WINDOW,
+                                  BandSchedule, ExecutionPlan, _round_up,
+                                  causal_step_mask, schedule)
 from repro.core.patterns import HybridSparsePattern
 
 
@@ -428,31 +429,73 @@ def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
                      t: jax.Array, pattern: HybridSparsePattern, *,
                      scale: Optional[float] = None,
                      cache_positions: Optional[jax.Array] = None) -> jax.Array:
-    """One-token decode against a KV cache (serve_step path).
+    """One-token decode against a KV cache (serve_step path) — RAGGED aware.
 
-    q: (B, 1, D); caches: (B, S, D); ``t`` = current absolute position
-    (scalar int). ``cache_positions``: (S,) absolute position of each cache
-    slot (defaults to arange — the dense baseline cache); a SALO ring cache
-    passes its slot->position map here and everything still works because
-    masks are position-based.
+    q: (B, 1, D); caches: (B, S, D); ``t`` = current absolute position:
+    a scalar (lockstep batch) OR a (B,) vector — one position per request,
+    the continuous-batching decode twin. ``cache_positions``: (S,) or
+    (B, S) absolute position per cache slot (defaults to arange — the dense
+    baseline cache); ring/paged caches pass their slot->position maps here
+    and everything still works because masks are position-based
+    (``scheduler.causal_step_mask``).
     """
     B, S, D = k_cache.shape
     scale = (D ** -0.5) if scale is None else scale
     pos_k = (jnp.arange(S, dtype=jnp.int32) if cache_positions is None
              else cache_positions.astype(jnp.int32))
-    pos_i = jnp.asarray(t, jnp.int32)
+    pos_k = jnp.broadcast_to(pos_k, (B, S))
+    pos_i = jnp.broadcast_to(jnp.asarray(t, jnp.int32), (B,))
 
-    p = pattern
-    a, b = p.window
-    rel = pos_k - pos_i
-    m = (rel >= a) & (rel <= b)
-    if p.dilation > 1:
-        m = m & (rel % p.dilation == 0)
-    if p.n_global > 0:
-        m = m | (pos_k < p.n_global)
-    m = m & (pos_k <= pos_i)  # decode is causal by construction
+    m = causal_step_mask(pattern, pos_i[:, None], pos_k,
+                         STEP_WINDOW | STEP_GLOBAL)           # (B, S)
     scores = _dot(q, k_cache) * scale            # (B, 1, S)
-    scores = jnp.where(m[None, None, :], scores, renorm.NEG_INF)
+    scores = jnp.where(m[:, None, :], scores, renorm.NEG_INF)
     w = jax.nn.softmax(scores, axis=-1)
     return jnp.einsum("bqs,bsd->bqd", w,
                       v_cache.astype(w.dtype)).astype(q.dtype)
+
+
+def chunk_attention(q: jax.Array, k_view: jax.Array, v_view: jax.Array,
+                    pos_q: jax.Array, pos_k: jax.Array,
+                    kv_blocks: jax.Array, flags: jax.Array,
+                    pattern: HybridSparsePattern, *,
+                    scale: Optional[float] = None) -> jax.Array:
+    """Plan-driven chunked-prefill attention: ONE table-driven pass.
+
+    q: (B, Cp, D) chunk queries; k_view/v_view: (B, Vp, D) the request's
+    paged KV view (sinks + ring) with the fresh chunk appended; pos_q:
+    (B, Cp) and pos_k: (B, Vp) ORIGINAL positions (``BIG`` = empty/pad);
+    kv_blocks/flags: (nq, W) ChunkPlan step tables (dynamic arrays — the
+    same compiled step serves every chunk of a request). One ``lax.scan``
+    over W table columns folds the whole causal hybrid pattern through the
+    renormalized online softmax — the serving twin of ``_plan_partial``.
+    """
+    B, Cp, D = q.shape
+    nq, W = kv_blocks.shape
+    block = Cp // nq
+    Vp = k_view.shape[1]
+    nkb = Vp // block
+    q_blk = q.reshape(B, nq, block, D)
+    k_r = k_view.reshape(B, nkb, block, D)
+    v_r = v_view.reshape(B, nkb, block, D)
+    pos_qb = pos_q.reshape(B, nq, block)
+    pos_kr = pos_k.reshape(B, nkb, block)
+    scale_ = (D ** -0.5) if scale is None else scale
+
+    def body(st, s):
+        blk = jax.lax.dynamic_index_in_dim(kv_blocks, s, axis=1,
+                                           keepdims=False)     # (nq,)
+        fl = jax.lax.dynamic_index_in_dim(flags, s, axis=1,
+                                          keepdims=False)      # (nq,)
+        k_blk = jnp.take(k_r, blk, axis=1)                     # (B,nq,Bk,D)
+        v_blk = jnp.take(v_r, blk, axis=1)
+        pos_kb = jnp.take(pos_kr, blk, axis=1)                 # (B,nq,Bk)
+        scores = _dot(q_blk, k_blk) * scale_
+        mask = causal_step_mask(pattern, pos_qb[:, :, :, None],
+                                pos_kb[:, :, None, :],
+                                fl[None, :, None, None])
+        return renorm.update(st, scores, v_blk, mask), ()
+
+    state = renorm.empty_state((B, nq, block), D)
+    state, _ = jax.lax.scan(body, state, jnp.arange(W, dtype=jnp.int32))
+    return renorm.finalize(state, q.dtype).reshape(B, Cp, D)

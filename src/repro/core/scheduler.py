@@ -33,6 +33,13 @@ into per-KV-block step tables (``plan.transposed()``), walked by the dK/dV
 backward kernel; the dQ backward kernel replays the forward tables. Gradients
 ride the paper's data-scheduler schedule symmetrically — no extra tiles.
 
+**ChunkPlan** (the serving prefill IR): a causal chunk-slice of the plan —
+queries ``[c0, c1)`` of a prompt against the request's paged ring-cache view
+plus the chunk itself (``build_chunk_plan``), so prefill is
+``ceil(P / chunk)`` fused table-driven passes instead of ``P`` sequential
+decode steps. :func:`causal_step_mask` is the shared serving mask (decode
+twin, decode kernels, chunked prefill).
+
 All levels are pure static metadata (numpy only) — safe to build at trace
 time and cache.
 """
@@ -425,6 +432,203 @@ def build_plan(sched: BandSchedule, block_q: int,
         nkb=nkb, max_steps=max_steps, kv_blocks=kv_blocks, flags=flags,
         band_set_ids=band_set_ids, band_sets=tuple(band_sets),
         num_steps=num_steps)
+
+
+# ---------------------------------------------------------------------- #
+# ChunkPlan IR — causal chunk-slicing of the plan for serving prefill
+# ---------------------------------------------------------------------- #
+def causal_step_mask(pattern: HybridSparsePattern, pos_i, pos_j, flags):
+    """The serving-side union mask: window | global column, causal.
+
+    Shared by the ragged decode twin, the chunked-prefill engine, and the
+    decode kernels — evaluated on ORIGINAL positions, so ring/paged slot
+    layouts are transparent. ``flags`` gates the components exactly like
+    :meth:`BandSchedule.step_mask` (0 = padding no-op). Padding slots carry
+    ``PAD_SENTINEL`` positions and fail every component: the window by
+    distance, the global column by ``pos_j < g``, and padded *query* rows by
+    the explicit in-range guard.
+
+    Equivalence to the training mask: for a causal 1-D pattern, row ``i`` of
+    ``pattern.mask(n)`` is window ∪ global-column restricted to ``j <= i``
+    (global *rows* ``i < g`` degenerate to the global column under
+    causality), which is exactly this union — so chunked prefill, decode,
+    and the full-sequence forward agree token-for-token.
+    """
+    import jax.numpy as jnp
+
+    p = pattern
+    if p.is_2d:
+        raise ValueError("causal_step_mask is the 1-D serving mask; 2-D "
+                         "patterns decode through the training engines")
+    pos_i = jnp.asarray(pos_i)
+    pos_j = jnp.asarray(pos_j)
+    flags = jnp.asarray(flags)
+    a, b = p.window
+    rel = pos_j - pos_i
+    w = (rel >= a) & (rel <= min(b, 0))
+    if p.dilation > 1:
+        w = w & (rel % p.dilation == 0)
+    m = w & ((flags & STEP_WINDOW) != 0)
+    if p.n_global > 0:
+        m = m | ((pos_j < p.n_global) & ((flags & STEP_GLOBAL) != 0))
+    return m & (pos_j <= pos_i) & (pos_i < BIG) & (pos_j < BIG)
+
+
+def ring_view_positions(chunk_start: int, n_sink: int, ring_cap: int,
+                        n_global: int) -> np.ndarray:
+    """Static position of every cached slot just before chunk ``c0`` starts.
+
+    The paged serving layout is deterministic: sink slot ``j`` holds
+    position ``j`` (once prefill has passed it), ring slot ``r`` holds the
+    LATEST position ``p < c0`` with ``p >= g`` and ``(p - g) % ring_cap ==
+    r``. Returns (n_sink + ring_cap,) int32 with ``BIG`` for slots not yet
+    written — the pruning oracle for :func:`build_chunk_plan` (runtime
+    masks use the slab's live position table, which matches this by
+    construction of the sequential prefill writes).
+    """
+    g, c0 = n_global, chunk_start
+    pos = np.full(n_sink + ring_cap, BIG, dtype=np.int32)
+    ns = min(g, c0, n_sink)
+    pos[:ns] = np.arange(ns)
+    if ring_cap > 0 and c0 > g:
+        r = np.arange(ring_cap)
+        base = g + r
+        latest = base + ((c0 - 1 - base) // ring_cap) * ring_cap
+        pos[n_sink:] = np.where(c0 - 1 >= base, latest.astype(np.int64),
+                                BIG).astype(np.int32)
+    return pos
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class ChunkPlan:
+    """Step tables for ONE causal prefill chunk: queries ``[c0, c1)``
+    against the paged KV view ``[sink slots | ring slots | the chunk
+    itself]``.
+
+    The view is position-scrambled (ring slots hold ``(p - g) % ring_cap``)
+    but the tables are exact: tile pruning uses the static slot->position
+    map (:func:`ring_view_positions`), masks are evaluated at runtime on
+    live positions via :func:`causal_step_mask`. Row ``i`` lists the view
+    tiles chunk-query-block ``i`` visits (ascending, deduplicated), flags
+    gate window vs global work, rows right-padded with ``flags == 0``
+    no-ops. One chunk = one fused table-driven pass — the serving mirror of
+    :class:`ExecutionPlan`.
+    """
+    pattern: HybridSparsePattern
+    chunk_start: int
+    chunk_len: int
+    chunk_pad: int            # chunk slots (block-aligned)
+    n_sink: int               # sink slots in the view (page-aligned)
+    ring_cap: int             # ring slots in the view (page-aligned)
+    block: int                # tile size (queries AND keys)
+    view_len: int             # n_sink + ring_cap + chunk_pad
+    nq: int                   # chunk query blocks
+    nkb: int                  # view KV tiles
+    max_steps: int
+    kv_blocks: np.ndarray     # (nq, max_steps) int32
+    flags: np.ndarray         # (nq, max_steps) int32
+    num_steps: np.ndarray     # (nq,) int32
+    view_positions: np.ndarray  # (view_len,) static positions (BIG = empty)
+
+    def _key(self):
+        return (self.pattern, self.chunk_start, self.chunk_len, self.n_sink,
+                self.ring_cap, self.block, self.chunk_pad)
+
+    def __hash__(self):
+        return hash(self._key())
+
+    def __eq__(self, other):
+        return isinstance(other, ChunkPlan) and self._key() == other._key()
+
+    def padded_tables(self, nq: int, width: int):
+        """Tables padded to a fixed (nq, width) so every chunk of a request
+        compiles to ONE jitted step (padding steps: tile 0, flags 0)."""
+        assert nq >= self.nq and width >= self.max_steps, \
+            (nq, width, self.nq, self.max_steps)
+        kv = np.zeros((nq, width), dtype=np.int32)
+        fl = np.zeros((nq, width), dtype=np.int32)
+        kv[: self.nq, : self.max_steps] = self.kv_blocks
+        fl[: self.nq, : self.max_steps] = self.flags
+        return kv, fl
+
+    def stats(self) -> dict:
+        """Tile accounting: what the fused chunk pass executes vs the
+        token-by-token decode replay it replaces."""
+        executed = int(self.num_steps.sum())
+        dense = self.nq * self.nkb
+        return dict(chunk_start=self.chunk_start, chunk_len=self.chunk_len,
+                    executed_tiles=executed, dense_tiles=dense,
+                    launches=1, token_by_token_launches=self.chunk_len)
+
+
+@functools.lru_cache(maxsize=4096)
+def build_chunk_plan(pattern: HybridSparsePattern, chunk_start: int,
+                     chunk_len: int, *, n_sink: int, ring_cap: int,
+                     block: int, chunk_pad: Optional[int] = None) -> ChunkPlan:
+    """Lower one causal prefill chunk into view-tile step tables.
+
+    ``n_sink``/``ring_cap`` describe the request's paged cache view (both
+    multiples of ``block``); the chunk rides behind them. Queries at
+    positions ``[c0, c0 + chunk_len)`` attend cached KV + the chunk itself
+    under the causal union mask. 2-D and non-causal patterns don't serve
+    through this path.
+    """
+    if pattern.is_2d or not pattern.causal:
+        raise ValueError("chunked prefill requires a causal 1-D pattern, "
+                         f"got {pattern}")
+    if n_sink % block or ring_cap % block:
+        raise ValueError(f"view regions ({n_sink}, {ring_cap}) must be "
+                         f"multiples of block {block}")
+    a, b = pattern.window
+    hi = min(b, 0)
+    g = pattern.n_global
+    c0, c1 = chunk_start, chunk_start + chunk_len
+    cp = _round_up(max(chunk_len, 1), block)
+    if chunk_pad is not None:
+        assert chunk_pad >= cp and chunk_pad % block == 0, (chunk_pad, cp)
+        cp = chunk_pad
+    ctx = n_sink + ring_cap
+    view_len = ctx + cp
+    nq, nkb = cp // block, view_len // block
+    vpos = np.full(view_len, BIG, dtype=np.int32)
+    vpos[:ctx] = ring_view_positions(c0, n_sink, ring_cap, g)
+    vpos[ctx: ctx + chunk_len] = np.arange(c0, c1, dtype=np.int32)
+
+    rows = []
+    for i in range(nq):
+        qlo = c0 + i * block
+        qhi = min(c1, qlo + block) - 1
+        if qlo >= c1:
+            rows.append([])
+            continue
+        row = []
+        for t in range(nkb):
+            tp = vpos[t * block: (t + 1) * block]
+            tp = tp[tp < BIG]
+            if tp.size == 0:
+                continue
+            fl = 0
+            if ((tp >= qlo + a) & (tp <= qhi + hi)).any():
+                fl |= STEP_WINDOW
+            if g > 0 and (tp < min(g, qhi + 1)).any():
+                fl |= STEP_GLOBAL
+            if fl:
+                row.append((t, fl))
+        rows.append(row)
+
+    max_steps = max(1, max(len(r) for r in rows))
+    kv_blocks = np.zeros((nq, max_steps), dtype=np.int32)
+    flags = np.zeros((nq, max_steps), dtype=np.int32)
+    num_steps = np.asarray([len(r) for r in rows], dtype=np.int32)
+    for i, row in enumerate(rows):
+        for s, (t, fl) in enumerate(row):
+            kv_blocks[i, s] = t
+            flags[i, s] = fl
+    return ChunkPlan(pattern=pattern, chunk_start=c0, chunk_len=chunk_len,
+                     chunk_pad=cp, n_sink=n_sink, ring_cap=ring_cap,
+                     block=block, view_len=view_len, nq=nq, nkb=nkb,
+                     max_steps=max_steps, kv_blocks=kv_blocks, flags=flags,
+                     num_steps=num_steps, view_positions=vpos)
 
 
 # ---------------------------------------------------------------------- #

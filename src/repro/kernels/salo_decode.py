@@ -1,14 +1,31 @@
-"""SALO single-token decode kernel (Pallas, TPU target).
+"""SALO ragged decode kernels (Pallas, TPU target).
 
-One new token against the SALO ring cache (``g`` sink slots + ``w``-slot
-ring): the kernel streams cache tiles through VMEM past the resident grouped
+One new token per request against the SALO cache, **one launch for the whole
+continuous batch**: the per-request position vector ``t`` rides in via
+scalar prefetch (``PrefetchScalarGridSpec``), so batch members at different
+depths — the normal state of a continuous-batching engine — share a single
+kernel launch instead of a lockstep scalar ``t``. Two cache layouts:
+
+* :func:`salo_decode` — per-request contiguous caches ``(B, Hkv, S, hd)``
+  (dense baseline or the legacy ring layout). Per-request slot-position
+  tiles make ring indexing transparent, exactly like the jnp engine.
+* :func:`salo_paged_decode` — the pooled paged ring-cache slab
+  ``(n_pages, page, Hkv, hd)`` shared by every request
+  (:mod:`repro.serve.paged_cache`): the per-request **page table** is the
+  second scalar-prefetch operand, and the BlockSpec index map chases it so
+  each grid step DMAs exactly one physical page tile — no per-request
+  gather ever materializes in HBM.
+
+Both kernels stream cache tiles through VMEM past the resident grouped
 query (GQA: rep = H/Hkv query rows share each KV head — no KV repeat), with
-the usual online-softmax scratch. Slot validity comes from the slot-position
-array, so ring indexing is transparent (exactly like the jnp engine).
+the usual online-softmax scratch. Masks are evaluated on original positions
+(``scheduler.causal_step_mask`` semantics, inlined below).
 
 Grid: ``(B, Hkv, n_slot_tiles)`` — last dim sequential.
-Validated in interpret mode against `core.attention.hybrid_decode_attention`
-(tests/test_decode_kernel.py).
+Compiled off-TPU both degrade to the XLA ragged decode twin
+(:func:`repro.core.attention.hybrid_decode_attention`) — same pattern as
+``kernels/ops.py`` for the forward/backward. Validated in interpret mode in
+tests/test_decode_kernel.py.
 """
 from __future__ import annotations
 
@@ -28,10 +45,17 @@ NEG_INF = -1e30
 LANES = 128
 
 
-def _kernel(t_ref, q_ref, k_ref, v_ref, pos_ref, out_ref,
-            acc_ref, m_scr, l_scr, *, pattern: HybridSparsePattern,
-            block_s: int, steps: int, scale: float):
-    s = pl.program_id(2)
+def _use_fallback(interpret: bool) -> bool:
+    """Compiled (non-interpret) Pallas TPU kernels only execute on TPU;
+    everywhere else the XLA ragged twin stands in (same masks)."""
+    return not interpret and jax.default_backend() != "tpu"
+
+
+def _tile_update(s, steps, t, q, k, v, pos_k, out_ref, acc_ref, m_scr, l_scr,
+                 *, pattern: HybridSparsePattern, scale: float):
+    """Fold one cache tile into the online-softmax scratch; finalize on the
+    last sequential step. q: (rep, hd); k/v: (Bs, hd); pos_k: (Bs,) int32;
+    t: per-request scalar position."""
 
     @pl.when(s == 0)
     def _init():
@@ -39,14 +63,12 @@ def _kernel(t_ref, q_ref, k_ref, v_ref, pos_ref, out_ref,
         m_scr[...] = jnp.full_like(m_scr, NEG_INF)
         l_scr[...] = jnp.zeros_like(l_scr)
 
-    q = q_ref[0, 0]                                   # (rep, hd)
-    k = k_ref[0, 0]                                   # (Bs, hd)
     scores = jax.lax.dot_general(
         q, k, (((1,), (1,)), ((), ())),
         preferred_element_type=jnp.float32) * scale   # (rep, Bs)
 
-    t = t_ref[0]
-    pos_k = pos_ref[0]                                # (Bs,) int32
+    # causal_step_mask with both flags, inlined (no in-range guard needed:
+    # PAD_SENTINEL slots fail the window by distance and pos_k <= t).
     a, _ = pattern.window
     g = pattern.n_global
     rel = pos_k - t
@@ -63,7 +85,6 @@ def _kernel(t_ref, q_ref, k_ref, v_ref, pos_ref, out_ref,
     shift = jnp.where(m_new <= NEG_INF / 2, 0.0, m_new)
     p = jnp.where(mask[None, :], jnp.exp(scores - shift), 0.0)
     corr = jnp.where(m_prev <= NEG_INF / 2, 0.0, jnp.exp(m_prev - shift))
-    v = v_ref[0, 0]
     pv = jax.lax.dot_general(p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
                              preferred_element_type=jnp.float32)
     acc_ref[...] = acc_ref[...] * corr + pv
@@ -77,52 +98,160 @@ def _kernel(t_ref, q_ref, k_ref, v_ref, pos_ref, out_ref,
                          jnp.where(l == 0.0, 1.0, l)).astype(out_ref.dtype)
 
 
+def _ragged_kernel(t_ref, q_ref, k_ref, v_ref, pos_ref, out_ref,
+                   acc_ref, m_scr, l_scr, *, pattern: HybridSparsePattern,
+                   steps: int, scale: float):
+    b = pl.program_id(0)
+    s = pl.program_id(2)
+    _tile_update(s, steps, t_ref[b], q_ref[0, 0], k_ref[0, 0], v_ref[0, 0],
+                 pos_ref[0, 0], out_ref, acc_ref, m_scr, l_scr,
+                 pattern=pattern, scale=scale)
+
+
+def _paged_kernel(t_ref, pt_ref, q_ref, k_ref, v_ref, pos_ref, out_ref,
+                  acc_ref, m_scr, l_scr, *, pattern: HybridSparsePattern,
+                  steps: int, scale: float):
+    b = pl.program_id(0)
+    s = pl.program_id(2)
+    _tile_update(s, steps, t_ref[b], q_ref[0, 0], k_ref[0, :, 0],
+                 v_ref[0, :, 0], pos_ref[0, 0], out_ref, acc_ref, m_scr,
+                 l_scr, pattern=pattern, scale=scale)
+
+
 @functools.partial(jax.jit, static_argnames=("pattern", "block_s", "scale",
                                              "interpret"))
 def salo_decode(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
                 positions: jax.Array, t, *, pattern: HybridSparsePattern,
                 block_s: int = 128, scale: Optional[float] = None,
                 interpret: bool = False) -> jax.Array:
-    """q: (B, H, 1, hd); caches: (B, Hkv, S, hd); positions: (S,) absolute
-    position per slot (huge sentinel = empty). Returns (B, H, 1, hd)."""
+    """q: (B, H, 1, hd); caches: (B, Hkv, S, hd); positions: (S,) shared or
+    (B, S) per-request absolute position per slot (huge sentinel = empty);
+    ``t``: scalar (lockstep) or (B,) per-request position — one launch
+    serves a ragged continuous batch. Returns (B, H, 1, hd)."""
     B, H, _, hd = q.shape
     Hkv, S = k_cache.shape[1], k_cache.shape[2]
     rep = H // Hkv
     scale_ = (hd ** -0.5) if scale is None else scale
+    t_arr = jnp.broadcast_to(jnp.asarray(t, jnp.int32), (B,))
+    pos = jnp.broadcast_to(jnp.asarray(positions, jnp.int32), (B, S))
+    if _use_fallback(interpret):
+        from repro.core.attention import hybrid_decode_attention
+        return hybrid_decode_attention(q, k_cache, v_cache, t_arr, pattern,
+                                       scale=scale_, cache_positions=pos)
     S_pad = -(-S // block_s) * block_s
     if S_pad != S:
         padc = ((0, 0), (0, 0), (0, S_pad - S), (0, 0))
         k_cache = jnp.pad(k_cache, padc)
         v_cache = jnp.pad(v_cache, padc)
-        positions = jnp.pad(positions, (0, S_pad - S),
-                            constant_values=PAD_SENTINEL)
+        pos = jnp.pad(pos, ((0, 0), (0, S_pad - S)),
+                      constant_values=PAD_SENTINEL)
     steps = S_pad // block_s
     qg = q.reshape(B, Hkv, rep, hd)
-    pos2d = positions.reshape(steps, block_s)
-    t_arr = jnp.asarray(t, jnp.int32)[None]
+    pos3d = pos.reshape(B, steps, block_s)
 
-    kern = functools.partial(_kernel, pattern=pattern, block_s=block_s,
-                             steps=steps, scale=scale_)
-    out = pl.pallas_call(
-        kern,
+    kern = functools.partial(_ragged_kernel, pattern=pattern, steps=steps,
+                             scale=scale_)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,                                # t vector
         grid=(B, Hkv, steps),
         in_specs=[
-            pl.BlockSpec((1,), lambda b, h, s: (0,)),                 # t
-            pl.BlockSpec((1, 1, rep, hd), lambda b, h, s: (b, h, 0, 0)),
-            pl.BlockSpec((1, 1, block_s, hd), lambda b, h, s: (b, h, s, 0)),
-            pl.BlockSpec((1, 1, block_s, hd), lambda b, h, s: (b, h, s, 0)),
-            pl.BlockSpec((1, block_s), lambda b, h, s: (s, 0)),       # pos
+            pl.BlockSpec((1, 1, rep, hd), lambda b, h, s, t: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, block_s, hd),
+                         lambda b, h, s, t: (b, h, s, 0)),
+            pl.BlockSpec((1, 1, block_s, hd),
+                         lambda b, h, s, t: (b, h, s, 0)),
+            pl.BlockSpec((1, 1, block_s), lambda b, h, s, t: (b, s, 0)),
         ],
-        out_specs=pl.BlockSpec((1, 1, rep, hd), lambda b, h, s: (b, h, 0, 0)),
-        out_shape=jax.ShapeDtypeStruct((B, Hkv, rep, hd), q.dtype),
+        out_specs=pl.BlockSpec((1, 1, rep, hd),
+                               lambda b, h, s, t: (b, h, 0, 0)),
         scratch_shapes=[
             pltpu.VMEM((rep, hd), jnp.float32),
             pltpu.VMEM((rep, LANES), jnp.float32),
             pltpu.VMEM((rep, LANES), jnp.float32),
         ],
+    )
+    out = pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, rep, hd), q.dtype),
         compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
         name="salo_decode",
-    )(t_arr, qg, k_cache, v_cache, pos2d)
+    )(t_arr, qg, k_cache, v_cache, pos3d)
+    return out.reshape(B, H, 1, hd)
+
+
+@functools.partial(jax.jit, static_argnames=("pattern", "block_s", "scale",
+                                             "interpret"))
+def salo_paged_decode(q: jax.Array, k_slab: jax.Array, v_slab: jax.Array,
+                      page_tables: jax.Array, positions: jax.Array, t, *,
+                      pattern: HybridSparsePattern,
+                      block_s: Optional[int] = None,
+                      scale: Optional[float] = None,
+                      interpret: bool = False) -> jax.Array:
+    """Ragged decode straight off the pooled paged slab.
+
+    q: (B, H, 1, hd); slabs: (n_pages, page, Hkv, hd) shared by ALL
+    requests; page_tables: (B, pages_per_req) int32 physical page per
+    logical page; positions: (B, S_req) absolute position per logical slot
+    (S_req = pages_per_req * page); ``t``: (B,) per-request position. The
+    page table is scalar-prefetched, so the BlockSpec index map resolves
+    logical tile -> physical page before each DMA — the kernel never sees a
+    gathered copy of the cache. Returns (B, H, 1, hd)."""
+    B, H, _, hd = q.shape
+    n_pages, page, Hkv, _ = k_slab.shape
+    npp = page_tables.shape[1]
+    S_req = npp * page
+    assert positions.shape == (B, S_req), (positions.shape, B, S_req)
+    rep = H // Hkv
+    scale_ = (hd ** -0.5) if scale is None else scale
+    t_arr = jnp.broadcast_to(jnp.asarray(t, jnp.int32), (B,))
+    if _use_fallback(interpret):
+        from repro.core.attention import hybrid_decode_attention
+        from repro.serve.paged_cache import gather_view
+        k_req, v_req = gather_view(k_slab, v_slab, page_tables)
+        return hybrid_decode_attention(
+            q, k_req.transpose(0, 2, 1, 3), v_req.transpose(0, 2, 1, 3),
+            t_arr, pattern, scale=scale_, cache_positions=positions)
+    bs = page if block_s is None else block_s
+    assert page % bs == 0, f"block_s {bs} must divide page {page}"
+    tpp = page // bs                       # tiles per page
+    steps = S_req // bs
+    qg = q.reshape(B, Hkv, rep, hd)
+    pos3d = positions.astype(jnp.int32).reshape(B, steps, bs)
+    pt_flat = page_tables.astype(jnp.int32).reshape(-1)
+
+    def kv_idx(b, h, s, t_ref, pt_ref):
+        return (pt_ref[b * npp + s // tpp], s % tpp, h, 0)
+
+    kern = functools.partial(_paged_kernel, pattern=pattern, steps=steps,
+                             scale=scale_)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,                     # t vector, page tables
+        grid=(B, Hkv, steps),
+        in_specs=[
+            pl.BlockSpec((1, 1, rep, hd),
+                         lambda b, h, s, t, pt: (b, h, 0, 0)),
+            pl.BlockSpec((1, bs, 1, hd), kv_idx),              # k slab
+            pl.BlockSpec((1, bs, 1, hd), kv_idx),              # v slab
+            pl.BlockSpec((1, 1, bs), lambda b, h, s, t, pt: (b, s, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, rep, hd),
+                               lambda b, h, s, t, pt: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((rep, hd), jnp.float32),
+            pltpu.VMEM((rep, LANES), jnp.float32),
+            pltpu.VMEM((rep, LANES), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, rep, hd), q.dtype),
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+        name="salo_paged_decode",
+    )(t_arr, pt_flat, qg, k_slab, v_slab, pos3d)
     return out.reshape(B, H, 1, hd)

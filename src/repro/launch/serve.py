@@ -1,7 +1,14 @@
-"""Serving driver: batched prefill + decode with the SALO windowed cache.
+"""Serving driver: lockstep baseline OR the continuous-batching engine.
 
   PYTHONPATH=src python -m repro.launch.serve --arch smollm-135m --smoke \\
       --batch 4 --prompt-len 32 --new-tokens 32
+  PYTHONPATH=src python -m repro.launch.serve --arch smollm-135m --smoke \\
+      --engine continuous --batch 4 --prompt-len 32 --new-tokens 16 \\
+      --chunk 16 --page 8
+
+``--engine continuous`` submits a RAGGED batch (prompt lengths spread
+around ``--prompt-len``) to the paged-slab engine and reports launch
+counters alongside throughput.
 """
 from __future__ import annotations
 
@@ -14,28 +21,70 @@ import numpy as np
 
 from repro.configs import get_config, get_smoke
 from repro.models.model import build_model
-from repro.serve.engine import ServeConfig, ServeEngine
+from repro.serve.engine import (ContinuousConfig, ContinuousEngine,
+                                ServeConfig, ServeEngine)
+
+
+def _ragged_lengths(base: int, batch: int, rng) -> list:
+    """Prompt lengths spread around ``base`` (min 2) — continuous batching
+    exists precisely because real traffic is ragged."""
+    return [max(2, int(l)) for l in
+            rng.integers(max(2, base // 2), base + 1, batch)]
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="smollm-135m")
     ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--engine", choices=("lockstep", "continuous"),
+                    default="lockstep")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--new-tokens", type=int, default=32)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--chunk", type=int, default=16)
+    ap.add_argument("--page", type=int, default=8)
+    ap.add_argument("--max-batch", type=int, default=0,
+                    help="engine rows (0 = --batch)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
     cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(args.seed))
+    rng = np.random.default_rng(args.seed)
+
+    if args.engine == "continuous":
+        if args.temperature != 0.0:
+            ap.error("--engine continuous is greedy-only "
+                     "(temperature sampling needs per-request RNG streams)")
+        max_batch = args.max_batch or args.batch
+        from repro.models.layers import salo_pattern
+        from repro.serve.paged_cache import layout_for_pattern
+        lay = layout_for_pattern(salo_pattern(cfg, causal=True), args.page)
+        eng = ContinuousEngine(model, ContinuousConfig(
+            n_pages=1 + max_batch * lay.pages_per_req, page=args.page,
+            chunk=args.chunk, max_batch=max_batch))
+        lens = _ragged_lengths(args.prompt_len, args.batch, rng)
+        rids = [eng.submit(rng.integers(0, cfg.vocab_size, (L,)),
+                           args.new_tokens) for L in lens]
+        t0 = time.perf_counter()
+        results = eng.run(params)
+        dt = time.perf_counter() - t0
+        total_new = args.batch * args.new_tokens
+        print(f"# arch={cfg.name} engine=continuous batch={args.batch} "
+              f"prompts={lens} new={args.new_tokens} chunk={args.chunk} "
+              f"page={args.page}")
+        print(f"# {dt:.2f}s total, {total_new/dt:.1f} tok/s "
+              f"(includes compile); counters={eng.counters}")
+        for rid in rids[:2]:
+            print(f"sample[{rid}]: {results[rid][:16].tolist()}")
+        return results
+
     max_len = args.prompt_len + args.new_tokens
     eng = ServeEngine(model, ServeConfig(max_len=max_len,
                                          temperature=args.temperature,
                                          seed=args.seed))
-    rng = np.random.default_rng(args.seed)
     prompts = jnp.asarray(rng.integers(0, cfg.vocab_size,
                                        (args.batch, args.prompt_len)))
     t0 = time.perf_counter()

@@ -20,6 +20,7 @@ from repro.configs.base import ModelConfig, SALOConfig
 from repro.core import (HybridSparsePattern, causal_sliding_window,
                         hybrid_attention, hybrid_decode_attention, longformer,
                         full)
+from repro.core.attention import hybrid_chunk_attention
 from repro.core.scheduler import PAD_SENTINEL
 from repro.dist.sharding import constrain
 
@@ -196,6 +197,63 @@ def attn_decode(p, x_t, cache_k, cache_v, t, cfg: ModelConfig,
         slice_window=cfg.salo.decode_slice and not cfg.salo.ring_cache)
     out = out.transpose(0, 2, 1, 3).reshape(B, 1, cfg.n_heads * cfg.hd)
     return out @ p["wo"].astype(x_t.dtype), cache_k, cache_v
+
+
+# ------------------- continuous-batching serve paths -------------------- #
+def attn_chunk_prefill(p, x_chunk, ctx_k, ctx_v, ctx_pos, pos_q, kv_blocks,
+                       flags, cfg: ModelConfig,
+                       pattern: HybridSparsePattern):
+    """One prompt chunk through a layer's attention (plan-driven prefill).
+
+    x_chunk: (1, Cp, d) chunk activations; ctx_k/ctx_v: (1, S_req, Hkv, hd)
+    the request's paged KV view (sinks + ring); ctx_pos: (1, S_req) live
+    slot positions; pos_q: (1, Cp) chunk positions (PAD_SENTINEL on padded
+    rows); kv_blocks/flags: (nq, W) ChunkPlan step tables. Returns
+    (out, k_chunk, v_chunk) — the fresh chunk KV for the caller's slab
+    write-back (the paper's window stream, cached as it flows by)."""
+    B, Cp, _ = x_chunk.shape
+    rope_pos = jnp.where(pos_q < PAD_SENTINEL, pos_q, 0)
+    q, k, v = attn_qkv(p, x_chunk, cfg, rope_pos)
+    k_view = jnp.concatenate([ctx_k.astype(k.dtype), k], axis=1)
+    v_view = jnp.concatenate([ctx_v.astype(v.dtype), v], axis=1)
+    pos_k = jnp.concatenate([ctx_pos, pos_q], axis=1)
+    out = hybrid_chunk_attention(
+        q.transpose(0, 2, 1, 3), k_view.transpose(0, 2, 1, 3),
+        v_view.transpose(0, 2, 1, 3), pos_q, pos_k, kv_blocks, flags,
+        pattern)
+    out = out.transpose(0, 2, 1, 3).reshape(B, Cp, cfg.n_heads * cfg.hd)
+    return out @ p["wo"].astype(x_chunk.dtype), k, v
+
+
+def attn_decode_paged(p, x_t, k_slab, v_slab, page_tables, slot_pos, t_vec,
+                      phys_w, off_w, cfg: ModelConfig,
+                      pattern: HybridSparsePattern, impl: str = "xla"):
+    """Ragged one-token decode against ONE layer's pooled paged slab.
+
+    x_t: (R, 1, d) — one token per engine row; k_slab/v_slab:
+    (n_pages, page, Hkv, hd); page_tables: (R, npp); slot_pos: (R, S_req)
+    live positions (already updated for this step's writes); t_vec: (R,)
+    per-request positions; phys_w/off_w: (R,) slab write targets (null page
+    for inactive rows). Returns (out, k_slab, v_slab)."""
+    from repro.serve.paged_cache import gather_view, slab_write
+
+    R = x_t.shape[0]
+    q, k, v = attn_qkv(p, x_t, cfg, t_vec[:, None])
+    k_slab, v_slab = slab_write(k_slab, v_slab, phys_w, off_w,
+                                k[:, 0], v[:, 0])
+    qt = q.transpose(0, 2, 1, 3)                       # (R, H, 1, hd)
+    if impl in ("pallas", "pallas_interpret"):
+        from repro.kernels.salo_decode import salo_paged_decode
+        out = salo_paged_decode(qt, k_slab, v_slab, page_tables, slot_pos,
+                                t_vec, pattern=pattern,
+                                interpret=(impl == "pallas_interpret"))
+    else:
+        k_req, v_req = gather_view(k_slab, v_slab, page_tables)
+        out = hybrid_decode_attention(
+            qt, k_req.transpose(0, 2, 1, 3), v_req.transpose(0, 2, 1, 3),
+            t_vec, pattern, cache_positions=slot_pos)
+    out = out.transpose(0, 2, 1, 3).reshape(R, 1, cfg.n_heads * cfg.hd)
+    return out @ p["wo"].astype(x_t.dtype), k_slab, v_slab
 
 
 # ------------------------------ embedding -------------------------------- #

@@ -196,17 +196,7 @@ def block_decode(p, cache, x_t, t, cfg: ModelConfig, kind: str, pattern,
                                   L.rmsnorm(p["ln1"], x_t, cfg.norm_eps),
                                   cache["k"], cache["v"], t, cfg, pattern,
                                   positions=positions, mrope=mrope)
-        x_t = x_t + h
-        h2 = L.rmsnorm(p["ln2"], x_t, cfg.norm_eps)
-        if kind in ("attn_mlp", "attn_mlp_local"):
-            x_t = x_t + L.mlp_apply(p["mlp"], h2, cfg)
-        elif kind == "attn_moe":
-            y, _ = MOE.moe_apply(p["moe"], h2, cfg)
-            x_t = x_t + y
-        else:
-            y, _ = MOE.moe_apply(p["moe"], h2, cfg)
-            x_t = x_t + y + L.mlp_apply(p["mlp"], h2, cfg)
-        return x_t, {"k": ck, "v": cv}
+        return _ffn_residual(p, x_t + h, cfg, kind), {"k": ck, "v": cv}
     if kind == "ssm":
         y, conv, st = SSM.ssm_decode(p["ssm"],
                                      L.rmsnorm(p["ln1"], x_t, cfg.norm_eps),
@@ -221,6 +211,97 @@ def block_decode(p, cache, x_t, t, cfg: ModelConfig, kind: str, pattern,
                                 L.rmsnorm(p["ln2"], x_t, cfg.norm_eps), cfg)
         return x_t, {"conv": conv, "state": st}
     raise ValueError(kind)
+
+
+# ----------------- continuous-batching serve block paths ---------------- #
+ATTN_KINDS = ("attn_mlp", "attn_mlp_local", "attn_moe", "attn_moe_dense")
+
+
+def _ffn_residual(p, x, cfg: ModelConfig, kind: str):
+    """The post-attention FFN residual shared by every attn block kind
+    (MoE aux losses are dropped — serving never backprops)."""
+    h2 = L.rmsnorm(p["ln2"], x, cfg.norm_eps)
+    if kind in ("attn_mlp", "attn_mlp_local"):
+        return x + L.mlp_apply(p["mlp"], h2, cfg)
+    if kind == "attn_moe":
+        y, _ = MOE.moe_apply(p["moe"], h2, cfg)
+        return x + y
+    if kind == "attn_moe_dense":
+        y, _ = MOE.moe_apply(p["moe"], h2, cfg)
+        return x + y + L.mlp_apply(p["mlp"], h2, cfg)
+    raise ValueError(f"continuous serving supports attention block kinds "
+                     f"{ATTN_KINDS}, got {kind!r}")
+
+
+def block_chunk_prefill(p, x, ctx_k, ctx_v, ctx_pos, pos_q, kv_blocks,
+                        flags, cfg: ModelConfig, kind: str, pattern):
+    """One prompt chunk through one block. Returns (x, k_chunk, v_chunk)."""
+    h, k_c, v_c = L.attn_chunk_prefill(
+        p["attn"], L.rmsnorm(p["ln1"], x, cfg.norm_eps), ctx_k, ctx_v,
+        ctx_pos, pos_q, kv_blocks, flags, cfg, pattern)
+    return _ffn_residual(p, x + h, cfg, kind), k_c, v_c
+
+
+def block_decode_paged(p, x_t, k_slab, v_slab, page_tables, slot_pos, t_vec,
+                       phys_w, off_w, cfg: ModelConfig, kind: str, pattern,
+                       impl: str):
+    """Ragged one-token decode through one block against the paged slab."""
+    h, k_slab, v_slab = L.attn_decode_paged(
+        p["attn"], L.rmsnorm(p["ln1"], x_t, cfg.norm_eps), k_slab, v_slab,
+        page_tables, slot_pos, t_vec, phys_w, off_w, cfg, pattern, impl)
+    return _ffn_residual(p, x_t + h, cfg, kind), k_slab, v_slab
+
+
+def segment_chunk_prefill(params, slab, x, page_table, ctx_pos, pos_q,
+                          kv_blocks, flags, phys_w, off_w, cfg: ModelConfig,
+                          kind: str, pattern):
+    """Scan one stacked segment over a prompt chunk, writing the slab.
+
+    ``slab``: :class:`repro.serve.paged_cache.PagedSlab` with leading layer
+    axis; ``page_table``: (npp,) the request's pages; ``phys_w``/``off_w``:
+    (Cp,) precomputed slab write targets for the chunk positions (ring-
+    overwritten and padded positions already routed to the null page).
+    Returns (x, new slab).
+    """
+    from repro.serve.paged_cache import PagedSlab
+
+    npp = page_table.shape[0]
+    page = slab.k.shape[2]
+
+    def body(carry, inp):
+        x = carry
+        layer_params, (k_l, v_l) = inp
+        Hkv, hd = k_l.shape[-2], k_l.shape[-1]
+        ctx_k = k_l[page_table].reshape(1, npp * page, Hkv, hd)
+        ctx_v = v_l[page_table].reshape(1, npp * page, Hkv, hd)
+        x, k_c, v_c = block_chunk_prefill(
+            layer_params, x, ctx_k, ctx_v, ctx_pos, pos_q, kv_blocks,
+            flags, cfg, kind, pattern)
+        k_l = k_l.at[phys_w, off_w].set(k_c[0].astype(k_l.dtype))
+        v_l = v_l.at[phys_w, off_w].set(v_c[0].astype(v_l.dtype))
+        return x, (k_l, v_l)
+
+    x, (k_new, v_new) = jax.lax.scan(body, x, (params, (slab.k, slab.v)))
+    return x, PagedSlab(k=k_new, v=v_new)
+
+
+def segment_decode_paged(params, slab, x_t, page_tables, slot_pos, t_vec,
+                         phys_w, off_w, cfg: ModelConfig, kind: str,
+                         pattern, impl: str):
+    """Scan one stacked segment for one ragged decode step. Returns
+    (x_t, new slab)."""
+    from repro.serve.paged_cache import PagedSlab
+
+    def body(carry, inp):
+        x_t = carry
+        layer_params, (k_l, v_l) = inp
+        x_t, k_l, v_l = block_decode_paged(
+            layer_params, x_t, k_l, v_l, page_tables, slot_pos, t_vec,
+            phys_w, off_w, cfg, kind, pattern, impl)
+        return x_t, (k_l, v_l)
+
+    x_t, (k_new, v_new) = jax.lax.scan(body, x_t, (params, (slab.k, slab.v)))
+    return x_t, PagedSlab(k=k_new, v=v_new)
 
 
 # ========================= programs & segments ========================== #

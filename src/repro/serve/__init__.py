@@ -1,2 +1,3 @@
-from repro.serve.engine import ServeConfig, ServeEngine
-from repro.serve import kv_cache
+from repro.serve.engine import (ContinuousConfig, ContinuousEngine,
+                                ServeConfig, ServeEngine)
+from repro.serve import batcher, kv_cache, paged_cache

@@ -1,0 +1,136 @@
+"""Request scheduler for the continuous-batching engine.
+
+Host-side control plane: requests enter a FIFO admission queue, get pages
+and an engine row on admission, move through PREFILL (one plan-driven chunk
+per engine step) into DECODE (all decoding rows share one ragged kernel
+launch per step), and on completion release their pages back to the pool —
+which is what lets the next waiting request in. The engine
+(:class:`repro.serve.engine.ContinuousEngine`) owns the device arrays; this
+module owns the lifecycle.
+
+Per-step work assembly (:meth:`Batcher.assemble`) deliberately mixes the
+two phases: every engine step advances each prefilling request by exactly
+one chunk AND runs one decode step for the whole decoding cohort, so long
+prompts never stall token emission for requests already decoding — the
+standard continuous-batching contract (Orca/vLLM), driven here by the
+ChunkPlan/ragged-decode machinery.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.serve.paged_cache import PageAllocator, PagedLayout
+
+WAITING, PREFILL, DECODE, DONE = "waiting", "prefill", "decode", "done"
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray            # (P,) int32
+    max_new: int
+    state: str = WAITING
+    row: int = -1                 # engine batch row while running
+    pages: Optional[np.ndarray] = None   # (pages_per_req,) physical pages
+    prefilled: int = 0            # prompt tokens already in the cache
+    out: List[int] = dataclasses.field(default_factory=list)
+
+    @property
+    def prompt_len(self) -> int:
+        return int(self.prompt.shape[0])
+
+    @property
+    def t_next(self) -> int:
+        """Position of the next token to feed in DECODE state (the last
+        sampled token): prompt_len + generated - 1."""
+        return self.prompt_len + len(self.out) - 1
+
+    @property
+    def done(self) -> bool:
+        return len(self.out) >= self.max_new
+
+
+class Batcher:
+    """Admission, per-step batch assembly, completion/eviction."""
+
+    def __init__(self, layout: PagedLayout, n_pages: int, max_batch: int):
+        self.layout = layout
+        self.alloc = PageAllocator(n_pages)
+        self.max_batch = max_batch
+        self.queue: List[Request] = []
+        self.rows: List[Optional[Request]] = [None] * max_batch
+        self.finished: Dict[int, Request] = {}
+        self._next_rid = 0
+
+    # ------------------------------- intake ---------------------------- #
+    def submit(self, prompt, max_new: int) -> int:
+        prompt = np.asarray(prompt, dtype=np.int32).reshape(-1)
+        assert prompt.size > 0 and max_new > 0
+        rid = self._next_rid
+        self._next_rid += 1
+        self.queue.append(Request(rid=rid, prompt=prompt, max_new=max_new))
+        return rid
+
+    def admit(self) -> List[Request]:
+        """FIFO admission while a row AND a full page set are available."""
+        admitted = []
+        while self.queue:
+            row = next((r for r, q in enumerate(self.rows) if q is None),
+                       None)
+            if row is None:
+                break
+            if not self.alloc.can_alloc(self.layout.pages_per_req):
+                break  # head-of-line waits for an eviction to recycle pages
+            req = self.queue.pop(0)
+            req.pages = self.alloc.alloc(self.layout.pages_per_req)
+            req.row = row
+            req.state = PREFILL
+            self.rows[row] = req
+            admitted.append(req)
+        return admitted
+
+    # ---------------------------- assembly ----------------------------- #
+    def assemble(self) -> Tuple[List[Request], List[Request]]:
+        """Work for one engine step: (prefilling requests — one chunk each,
+        decoding requests — one shared ragged decode step)."""
+        pre = [q for q in self.rows if q is not None and q.state == PREFILL]
+        dec = [q for q in self.rows if q is not None and q.state == DECODE]
+        return pre, dec
+
+    # --------------------------- transitions --------------------------- #
+    def to_decode(self, req: Request, first_token: int) -> None:
+        """Prefill finished: record the token sampled from the last-chunk
+        logits and (unless max_new == 1) enter the decode cohort."""
+        assert req.state == PREFILL and req.prefilled == req.prompt_len
+        req.out.append(int(first_token))
+        if req.done:
+            self.finish(req)
+        else:
+            req.state = DECODE
+
+    def record_token(self, req: Request, token: int) -> None:
+        assert req.state == DECODE
+        req.out.append(int(token))
+        if req.done:
+            self.finish(req)
+
+    def finish(self, req: Request) -> None:
+        """Completion/eviction: recycle the pages, free the row."""
+        req.state = DONE
+        self.alloc.release(req.pages)
+        req.pages = None
+        self.rows[req.row] = None
+        req.row = -1
+        self.finished[req.rid] = req
+
+    # ------------------------------ status ----------------------------- #
+    @property
+    def idle(self) -> bool:
+        return not self.queue and all(q is None for q in self.rows)
+
+    def results(self) -> Dict[int, np.ndarray]:
+        return {rid: np.asarray(req.out, dtype=np.int32)
+                for rid, req in sorted(self.finished.items())}

@@ -1,16 +1,25 @@
-"""Serving engine: batched prefill + decode over either cache layout.
+"""Serving engines: the lockstep baseline and the continuous-batching engine.
 
-``ServeEngine`` drives a model end-to-end: prefill a batch of prompts (one
-full-sequence forward that also writes KV caches), then step the decode loop
-with greedy/temperature sampling. The SALO ring cache path demonstrates the
-O(window) memory serving mode; the full cache path is the dense baseline the
-decode dry-run shapes use.
+``ServeEngine`` (lockstep): prefill a rectangular batch token-by-token, then
+step the decode loop in lockstep — every sequence at the same position. The
+correctness baseline, and the thing the continuous engine is measured
+against.
+
+``ContinuousEngine``: the production-style path. Requests of different
+lengths enter a scheduler (:mod:`repro.serve.batcher`), share ONE pooled
+paged ring-cache slab (:mod:`repro.serve.paged_cache`), prefill in
+plan-driven chunks (``ChunkPlan`` — ``ceil(P/chunk)`` fused passes instead
+of ``P`` sequential decode steps), and decode ragged: one launch per step
+serves every in-flight request at its own position via the per-request
+``t`` vector / page tables of :mod:`repro.kernels.salo_decode`. Greedy
+outputs match the lockstep baseline token-for-token
+(tests/test_serve_continuous.py).
 """
 from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Optional
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -75,3 +84,230 @@ class ServeEngine:
         (_, _, _), toks = jax.lax.scan(
             body, (cache, logits, rng), jnp.arange(n_new))
         return toks.T  # (B, n_new)
+
+
+# ====================================================================== #
+# Continuous batching
+# ====================================================================== #
+@dataclasses.dataclass(frozen=True)
+class ContinuousConfig:
+    """Knobs of the continuous-batching engine.
+
+    ``n_pages`` sizes the pooled slab (page 0 is reserved); ``chunk`` is
+    the prefill chunk length (one fused launch each); ``max_batch`` the
+    engine rows (max concurrent requests); ``decode_impl`` selects the
+    ragged decode engine: ``xla`` (gather + ragged twin — trains anywhere),
+    ``pallas`` (the paged kernel; degrades to xla off-TPU) or
+    ``pallas_interpret`` (CPU numerics check of the kernel)."""
+    n_pages: int
+    page: int = 8
+    chunk: int = 16
+    max_batch: int = 4
+    decode_impl: str = "xla"
+
+
+class ContinuousEngine:
+    """Continuous-batching serving over the paged ring-cache slab.
+
+    Greedy decoding only (temperature sampling needs per-request RNG
+    streams — a scheduler policy, not an engine limitation). Supports every
+    attention-block architecture with a causal 1-D SALO pattern; SSM /
+    recurrent / encoder-decoder programs keep the lockstep path.
+    """
+
+    def __init__(self, model: Model, ccfg: ContinuousConfig):
+        from repro.models import layers as L
+        from repro.models import transformer as T
+        from repro.serve.batcher import Batcher
+        from repro.serve.paged_cache import layout_for_pattern, slab_init
+
+        cfg = model.cfg
+        if cfg.mrope_sections is not None or cfg.encoder_decoder:
+            raise NotImplementedError("continuous serving: text-only LMs")
+        for kind, _ in model.program:
+            if kind not in T.ATTN_KINDS:
+                raise NotImplementedError(
+                    f"continuous serving needs attention blocks, got {kind}")
+        self.model = model
+        self.ccfg = ccfg
+        self.pattern = L.salo_pattern(cfg, causal=True)
+        if self.pattern.is_2d or not self.pattern.causal:
+            raise NotImplementedError("continuous serving: causal 1-D only")
+        self.layout = layout_for_pattern(self.pattern, ccfg.page)
+        self.batcher = Batcher(self.layout, ccfg.n_pages, ccfg.max_batch)
+
+        lay = self.layout
+        self.chunk_pad = -(-max(ccfg.chunk, 1) // ccfg.page) * ccfg.page
+        self.nq = self.chunk_pad // ccfg.page
+        self.ctx_len = lay.n_sink + lay.ring_cap
+        self.table_w = (self.ctx_len + self.chunk_pad) // ccfg.page
+
+        dtype = jnp.dtype(cfg.compute_dtype)
+        self.slabs = {
+            f"seg{i}_{kind}": slab_init(n, ccfg.n_pages, ccfg.page,
+                                        cfg.n_kv_heads, cfg.hd, dtype)
+            for i, (kind, n) in enumerate(model.program)}
+        from repro.serve.paged_cache import empty_positions
+        self.slot_pos = empty_positions(ccfg.max_batch, lay)
+        self.page_tables = np.zeros((ccfg.max_batch, lay.pages_per_req),
+                                    np.int32)
+        self.counters = {"prefill_launches": 0, "decode_launches": 0,
+                         "prefill_tokens": 0, "decode_tokens": 0}
+        self._chunk_jit = jax.jit(self._chunk_fn)
+        self._decode_jit = jax.jit(self._decode_fn)
+
+    # -------------------------- jitted steps --------------------------- #
+    def _chunk_fn(self, params, slabs, page_table, ctx_pos, pos_q, tokens,
+                  kv_blocks, flags, phys_w, off_w):
+        """One plan-driven prefill chunk for ONE request (all layers).
+
+        All operands are fixed-shape (chunk padded to ``chunk_pad``, tables
+        to ``table_w``), so every chunk of every request reuses one
+        compilation. Returns (chunk logits (Cp, V), new slabs)."""
+        from repro.models import layers as L
+        from repro.models import transformer as T
+
+        cfg = self.model.cfg
+        x = self.model._embed_inputs(params, {"tokens": tokens[None]})
+        new_slabs = {}
+        for i, (kind, n) in enumerate(self.model.program):
+            key = f"seg{i}_{kind}"
+            x, new_slabs[key] = T.segment_chunk_prefill(
+                params[key], slabs[key], x, page_table, ctx_pos[None],
+                pos_q[None], kv_blocks, flags, phys_w, off_w, cfg, kind,
+                self.pattern)
+        x = L.rmsnorm(params["ln_f"], x, cfg.norm_eps)
+        logits = L.logits_apply(params["embed"], params.get("lm_head"),
+                                x, cfg)
+        return logits[0], new_slabs
+
+    def _decode_fn(self, params, slabs, page_tables, slot_pos, tokens,
+                   t_vec, active):
+        """One ragged decode step for the WHOLE cohort: every in-flight
+        request advances one token at its own position. Inactive rows write
+        to the null page and their logits are discarded."""
+        from repro.models import layers as L
+        from repro.models import transformer as T
+
+        cfg = self.model.cfg
+        R = tokens.shape[0]
+        lay = self.layout
+        slot = lay.slot(t_vec)
+        phys_w, off_w = lay.write_target(jnp.asarray(page_tables), t_vec,
+                                         keep=active)
+        rows = jnp.arange(R)
+        slot_pos = slot_pos.at[rows, slot].set(
+            jnp.where(active, t_vec, slot_pos[rows, slot]))
+        x = self.model._embed_inputs(params, {"tokens": tokens[:, None]})
+        new_slabs = {}
+        for i, (kind, n) in enumerate(self.model.program):
+            key = f"seg{i}_{kind}"
+            x, new_slabs[key] = T.segment_decode_paged(
+                params[key], slabs[key], x, jnp.asarray(page_tables),
+                slot_pos, t_vec, phys_w, off_w, cfg, kind, self.pattern,
+                self.ccfg.decode_impl)
+        x = L.rmsnorm(params["ln_f"], x, cfg.norm_eps)
+        logits = L.logits_apply(params["embed"], params.get("lm_head"),
+                                x, cfg)
+        return logits[:, 0, :], new_slabs, slot_pos
+
+    # --------------------------- host driving -------------------------- #
+    def submit(self, prompt, max_new: int) -> int:
+        return self.batcher.submit(prompt, max_new)
+
+    def _admit(self):
+        from repro.core.scheduler import PAD_SENTINEL
+
+        for req in self.batcher.admit():
+            self.page_tables[req.row] = req.pages
+            self.slot_pos = self.slot_pos.at[req.row].set(PAD_SENTINEL)
+
+    def _advance_prefill(self, params, req):
+        """Run the request's next chunk: ONE fused table-driven pass."""
+        from repro.core.scheduler import (BIG, build_chunk_plan,
+                                          ring_view_positions)
+
+        lay, page = self.layout, self.ccfg.page
+        P = req.prompt_len
+        c0 = req.prefilled
+        clen = min(self.ccfg.chunk, P - c0)
+        c1 = c0 + clen
+        plan = build_chunk_plan(self.pattern, c0, clen, n_sink=lay.n_sink,
+                                ring_cap=lay.ring_cap, block=page,
+                                chunk_pad=self.chunk_pad)
+        kv, fl = plan.padded_tables(self.nq, self.table_w)
+        ctx_pos = plan.view_positions[: self.ctx_len]
+        Cp = self.chunk_pad
+        pos_q = np.full(Cp, BIG, np.int32)
+        pos_q[:clen] = np.arange(c0, c1, dtype=np.int32)
+        tokens = np.zeros(Cp, np.int32)
+        tokens[:clen] = req.prompt[c0:c1]
+        # Slab write targets: ring-overwritten positions (chunk longer than
+        # the ring) and padded rows route to the null page.
+        pos = np.arange(c0, c0 + Cp, dtype=np.int64)
+        keep = (np.arange(Cp) < clen) & (
+            (pos < lay.n_global) | (pos + lay.ring_cap >= c1))
+        slot = np.where(pos < lay.n_global, pos,
+                        lay.n_sink + (pos - lay.n_global) % lay.ring_cap)
+        phys = np.where(keep, req.pages[slot // page], 0).astype(np.int32)
+        off = np.where(keep, slot % page, 0).astype(np.int32)
+
+        logits, self.slabs = self._chunk_jit(
+            params, self.slabs, jnp.asarray(req.pages),
+            jnp.asarray(ctx_pos), jnp.asarray(pos_q), jnp.asarray(tokens),
+            jnp.asarray(kv), jnp.asarray(fl), jnp.asarray(phys),
+            jnp.asarray(off))
+        self.counters["prefill_launches"] += 1
+        self.counters["prefill_tokens"] += clen
+        req.prefilled = c1
+        if c1 == P:
+            first = int(np.argmax(np.asarray(logits[clen - 1])))
+            self.slot_pos = self.slot_pos.at[req.row].set(
+                jnp.asarray(ring_view_positions(P, lay.n_sink, lay.ring_cap,
+                                                lay.n_global)))
+            self.batcher.to_decode(req, first)
+
+    def _advance_decode(self, params, reqs):
+        R = self.ccfg.max_batch
+        tokens = np.zeros(R, np.int32)
+        t_vec = np.zeros(R, np.int32)
+        active = np.zeros(R, bool)
+        for req in reqs:
+            tokens[req.row] = req.out[-1]
+            t_vec[req.row] = req.t_next
+            active[req.row] = True
+        logits, self.slabs, self.slot_pos = self._decode_jit(
+            params, self.slabs, self.page_tables.copy(),
+            self.slot_pos, jnp.asarray(tokens), jnp.asarray(t_vec),
+            jnp.asarray(active))
+        self.counters["decode_launches"] += 1
+        self.counters["decode_tokens"] += len(reqs)
+        logits = np.asarray(logits)
+        for req in reqs:
+            self.batcher.record_token(req, int(np.argmax(logits[req.row])))
+
+    def step(self, params) -> bool:
+        """One engine iteration: admit, advance every prefilling request by
+        one chunk, run one ragged decode step for the decoding cohort.
+        Returns True while work remains."""
+        self._admit()
+        pre, dec = self.batcher.assemble()
+        if not pre and not dec:
+            if self.batcher.queue:
+                raise RuntimeError(
+                    "page pool too small for a single request "
+                    f"(need {self.layout.pages_per_req}, "
+                    f"pool {self.batcher.alloc.n_free})")
+            return False
+        for req in pre:
+            self._advance_prefill(params, req)
+        if dec:
+            self._advance_decode(params, dec)
+        return not self.batcher.idle
+
+    def run(self, params) -> Dict[int, np.ndarray]:
+        """Drive all submitted requests to completion; returns
+        {rid: generated tokens}."""
+        while self.step(params):
+            pass
+        return self.batcher.results()

@@ -3,9 +3,10 @@
 Baseline (assignment's decode shapes): a full ``(B, seq_len, Hkv, hd)`` cache
 — slot == absolute position.
 
-**SALO ring cache** (beyond-paper serving optimization, EXPERIMENTS.md
-§Perf): under the paper's hybrid sparse pattern a decode step only ever reads
-the ``n_global`` sink keys plus the last ``window`` keys, so the cache needs
+**SALO ring cache** (beyond-paper serving optimization; footprint numbers in
+README §Serving and ``benchmarks/serve_stats.py`` -> BENCH_serve.json):
+under the paper's hybrid sparse pattern a decode step only ever reads the
+``n_global`` sink keys plus the last ``window`` keys, so the cache needs
 ``window + n_global`` slots regardless of context length — O(1) memory in
 sequence length, the serving-side mirror of the paper's O(n·w) training
 claim. Slots carry their absolute position; the position-based masks in
@@ -14,6 +15,12 @@ claim. Slots carry their absolute position; the position-based masks in
 
 Layout: slots [0, g) pinned to the global/sink tokens; slots [g, g+w) a ring
 keyed by ``position % window``.
+
+NOTE: this is the *lockstep* cache — ``positions`` is shared by the whole
+batch, so every sequence must sit at the same ``t``. The continuous-batching
+engine uses the pooled paged slab (:mod:`repro.serve.paged_cache`) instead:
+per-request page tables AND per-request positions (plus a ring sized for the
+full dilated lookback, which this layout under-provisions at dilation > 1).
 """
 from __future__ import annotations
 

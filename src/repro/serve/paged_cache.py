@@ -1,0 +1,228 @@
+"""Paged ring-cache slab: ONE pooled KV allocation shared by all requests.
+
+The serving-side mirror of the paper's hybrid sparse pattern, upgraded from
+the per-batch :class:`repro.serve.kv_cache.RingCache` to a production-style
+paged pool (vLLM-style paging x SALO's O(window) live set):
+
+* **One slab per model segment** — ``(n_layers, n_pages, page, Hkv, hd)``
+  for K and V. No per-request allocation ever happens after engine init;
+  admission just hands out pages, completion recycles them.
+* **Per-request page table** — each request owns ``sink_pages`` pages
+  pinned to the global/sink prefix plus ``ring_pages`` pages forming a ring
+  over the window lookback. Under dilation ``d`` the ring spans the full
+  dilated lookback ``(w - 1) * d + 1`` positions (the legacy ring kept only
+  ``w`` slots, silently dropping dilated keys — see
+  tests/test_serve_continuous.py::test_dilated_decode_parity).
+* **Per-request positions** — ``(R, slots_per_req)`` absolute position per
+  logical slot (``PAD_SENTINEL`` = empty), fixing the legacy cache's
+  batch-shared ``positions: (g + w,)``: a continuous batch's members sit at
+  different depths, so slot->position maps cannot be shared.
+
+Page 0 is reserved as the **null page**: inactive batch rows and dropped
+writes are routed there, which keeps every scatter shape-static under jit
+without masking logic in the hot path.
+
+Slot map (logical, per request): position ``p < g`` lives at slot ``p``
+inside the sink region ``[0, n_sink)``; position ``p >= g`` lives at slot
+``n_sink + (p - g) % ring_cap``. Masks downstream are position-based
+(:func:`repro.core.scheduler.causal_step_mask`), so the scrambled ring
+order is transparent — exactly the legacy ring-cache argument, per request.
+
+Cache footprint accounting lives in :func:`slab_bytes` and feeds
+``benchmarks/serve_stats.py`` (BENCH_serve.json).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import List, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.scheduler import PAD_SENTINEL
+
+
+def _ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+@dataclasses.dataclass(frozen=True)
+class PagedLayout:
+    """Static per-request geometry of the paged ring cache."""
+    page: int
+    window: int
+    n_global: int
+    dilation: int = 1
+
+    def __post_init__(self):
+        if self.page < 1 or self.window < 1 or self.dilation < 1:
+            raise ValueError(f"bad paged layout {self}")
+        if self.window > 1 << 28:
+            raise ValueError("paged serving needs a bounded window "
+                             "(salo pattern disabled / dense?)")
+
+    @property
+    def span(self) -> int:
+        """Positions the ring must retain: the full dilated lookback."""
+        return (self.window - 1) * self.dilation + 1
+
+    @property
+    def sink_pages(self) -> int:
+        return _ceil_div(self.n_global, self.page) if self.n_global else 0
+
+    @property
+    def ring_pages(self) -> int:
+        return _ceil_div(self.span, self.page)
+
+    @property
+    def n_sink(self) -> int:
+        return self.sink_pages * self.page
+
+    @property
+    def ring_cap(self) -> int:
+        return self.ring_pages * self.page
+
+    @property
+    def pages_per_req(self) -> int:
+        return self.sink_pages + self.ring_pages
+
+    @property
+    def slots_per_req(self) -> int:
+        return self.pages_per_req * self.page
+
+    # ------------------------------------------------------------------ #
+    def slot(self, p):
+        """Logical slot of absolute position ``p`` (jnp-compatible)."""
+        p = jnp.asarray(p, jnp.int32)
+        g = self.n_global
+        return jnp.where(p < g, p, self.n_sink + (p - g) % self.ring_cap)
+
+    def write_target(self, page_table, p, keep=None):
+        """(physical page, offset) for writing position ``p``.
+
+        ``page_table``: (..., pages_per_req) int32; ``p``: (...) positions
+        (leading dims must match). ``keep``: optional bool mask — False
+        routes the write to the reserved null page 0 (inactive rows,
+        ring-overwritten chunk positions). Returns (phys, off).
+        """
+        s = self.slot(p)
+        pg = s // self.page
+        off = s % self.page
+        phys = jnp.take_along_axis(page_table, pg[..., None],
+                                   axis=-1)[..., 0]
+        if keep is not None:
+            phys = jnp.where(keep, phys, 0)
+            off = jnp.where(keep, off, 0)
+        return phys, off
+
+
+def layout_for_pattern(pattern, page: int) -> PagedLayout:
+    """THE layout derivation — engine and pool-sizing callers share it, so
+    ``n_pages = 1 + max_batch * layout.pages_per_req`` always matches what
+    admission will actually request."""
+    if pattern.is_2d or not pattern.causal:
+        raise ValueError(f"paged serving needs a causal 1-D pattern: "
+                         f"{pattern}")
+    return PagedLayout(page=page, window=pattern.window_size(),
+                       n_global=pattern.n_global, dilation=pattern.dilation)
+
+
+class PagedSlab(NamedTuple):
+    """Pooled KV for one model segment: (n_layers, n_pages, page, Hkv, hd).
+
+    Layer ``i`` of the segment's stacked scan uses slab row ``i``; all
+    layers of all segments share the SAME page tables (a request's page p
+    means page p in every layer — the standard paged-KV invariant)."""
+    k: jax.Array
+    v: jax.Array
+
+
+def slab_init(n_layers: int, n_pages: int, page: int, n_kv_heads: int,
+              head_dim: int, dtype) -> PagedSlab:
+    shape = (n_layers, n_pages, page, n_kv_heads, head_dim)
+    return PagedSlab(k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype))
+
+
+def slab_write(k_slab: jax.Array, v_slab: jax.Array, phys: jax.Array,
+               off: jax.Array, k_t: jax.Array, v_t: jax.Array):
+    """Scatter per-request new KV into ONE layer's slab.
+
+    k_slab/v_slab: (n_pages, page, Hkv, hd); phys/off: (B,) from
+    :meth:`PagedLayout.write_target`; k_t/v_t: (B, Hkv, hd). Rows routed to
+    the null page collide harmlessly (page 0 is never read)."""
+    return (k_slab.at[phys, off].set(k_t.astype(k_slab.dtype)),
+            v_slab.at[phys, off].set(v_t.astype(v_slab.dtype)))
+
+
+def gather_view(k_slab: jax.Array, v_slab: jax.Array,
+                page_tables: jax.Array):
+    """Materialize per-request logical KV views (the XLA decode twin path;
+    the Pallas kernel chases the page table instead and never does this).
+
+    k_slab/v_slab: (n_pages, page, Hkv, hd); page_tables: (B, npp).
+    Returns (B, npp * page, Hkv, hd) x 2."""
+    B, npp = page_tables.shape
+    _, page, Hkv, hd = k_slab.shape
+    kv = k_slab[page_tables].reshape(B, npp * page, Hkv, hd)
+    vv = v_slab[page_tables].reshape(B, npp * page, Hkv, hd)
+    return kv, vv
+
+
+def empty_positions(n_requests: int, layout: PagedLayout) -> jax.Array:
+    """Per-request slot->position table, all-empty (PAD_SENTINEL)."""
+    return jnp.full((n_requests, layout.slots_per_req), PAD_SENTINEL,
+                    jnp.int32)
+
+
+# ---------------------------------------------------------------------- #
+class PageAllocator:
+    """Free-list page allocator over the pooled slab (host-side).
+
+    Page 0 is reserved as the null page and never handed out. Admission
+    calls :meth:`alloc`; completion calls :meth:`release` — recycled pages
+    go straight back to the free list (no zeroing needed: positions are the
+    validity source of truth, stale KV in a reused page is masked out by
+    its PAD positions until overwritten)."""
+
+    def __init__(self, n_pages: int):
+        if n_pages < 2:
+            raise ValueError("need >= 2 pages (page 0 is reserved)")
+        self.n_pages = n_pages
+        self._free: List[int] = list(range(n_pages - 1, 0, -1))
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    def can_alloc(self, n: int) -> bool:
+        return len(self._free) >= n
+
+    def alloc(self, n: int) -> np.ndarray:
+        if not self.can_alloc(n):
+            raise RuntimeError(f"page pool exhausted ({n} > {self.n_free})")
+        pages = [self._free.pop() for _ in range(n)]
+        return np.asarray(pages, dtype=np.int32)
+
+    def release(self, pages) -> None:
+        for p in np.asarray(pages).tolist():
+            assert 0 < p < self.n_pages, p
+            assert p not in self._free, f"double free of page {p}"
+            self._free.append(p)
+
+
+# ---------------------------------------------------------------------- #
+def slab_bytes(n_layers_total: int, n_pages: int, page: int,
+               n_kv_heads: int, head_dim: int, dtype_bytes: int = 2) -> int:
+    """Total pooled slab footprint (all segments' layers, K+V)."""
+    return 2 * n_layers_total * n_pages * page * n_kv_heads * head_dim \
+        * dtype_bytes
+
+
+def full_cache_bytes(n_layers_total: int, batch: int, max_len: int,
+                     n_kv_heads: int, head_dim: int,
+                     dtype_bytes: int = 2) -> int:
+    """What the lockstep dense baseline allocates for the same traffic."""
+    return 2 * n_layers_total * batch * max_len * n_kv_heads * head_dim \
+        * dtype_bytes
