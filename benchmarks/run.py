@@ -18,7 +18,7 @@ def main() -> None:
                     help="skip the slow measured-speedup benchmarks")
     args = ap.parse_args()
 
-    from benchmarks import paper_claims, plan_stats, serve_stats
+    from benchmarks import dist_stats, paper_claims, plan_stats, serve_stats
 
     rows = []
     paper_claims.sec63_sanger_comparison(rows)
@@ -29,6 +29,8 @@ def main() -> None:
     plan_stats.bwd_benchmark(rows, measure=not args.quick)
     # Serving: continuous batching vs lockstep (BENCH_serve.json)
     serve_stats.serve_benchmark(rows, measure=not args.quick)
+    # Sequence parallelism: halo bytes vs all-gather + parity (BENCH_dist)
+    dist_stats.dist_benchmark(rows, measure=not args.quick)
     if not args.quick:
         paper_claims.fig7_speedup(rows)
         paper_claims.sec21_quadratic_scaling(rows)
@@ -83,6 +85,15 @@ def main() -> None:
         failures.append(("serve_decode_launches",
                          d["serve/decode_launch_reduction"],
                          "> 1.0 (ragged batching shares launches)"))
+    # sequence parallelism: halo exchange must beat the all-gather ring on
+    # EVERY workload (the (w+Bk)·d vs n·d claim), and the sharded engines
+    # must be numerically identical to the single-device fused path
+    for k, v in d.items():
+        if k.startswith("dist/") and k.endswith("bytes_ratio") and v >= 1.0:
+            failures.append((k, v, "< 1.0 (halo bytes < all-gather bytes)"))
+    if "dist/parity" in d and d["dist/parity"] != 1.0:
+        failures.append(("dist_parity", d["dist/parity"],
+                         "== 1.0 (sharded fwd+bwd == single-device fused)"))
     if failures:
         for f in failures:
             print(f"CHECK-FAILED: {f}", file=sys.stderr)

@@ -69,6 +69,22 @@ def hybrid_attention(q: jax.Array, k: jax.Array, v: jax.Array,
     assert qf.shape == kf.shape == vf.shape == (B * H, N, D), \
         "engines (incl. pallas) require the flat (B*H, N, D) layout"
 
+    # Sequence parallelism: when the active sharding rules map the "seq"
+    # logical axis onto a mesh axis (long-context cells turn this on in
+    # launch.specs.cell_rules), run the ShardedPlan path — the same fused
+    # engines under shard_map with ppermute halo exchange — instead of
+    # letting pjit all-gather K/V.
+    if impl in ("blockwise", "pallas", "pallas_interpret"):
+        from repro.dist.sharding import sequence_mesh_axis
+        seq = sequence_mesh_axis()
+        if seq is not None:
+            from repro.dist.sharded_plan import sharded_attention
+            mesh, ax = seq
+            out = sharded_attention(qf, kf, vf, pattern, mesh, ax,
+                                    block_q=block_q, block_k=block_k,
+                                    scale=scale, impl=impl)
+            return out.reshape(B, H, N, D)
+
     if impl == "dense_ref":
         from repro.kernels.ref import reference_attention
         out = reference_attention(qf, kf, vf, pattern, scale=scale)

@@ -136,29 +136,65 @@ def _plan_partial(state: renorm.PartialState, q_blk, k_pad, v_pad, pos_pad,
                                 jnp.arange(steps, dtype=jnp.int32))
         return state
 
-    # General path: gather each step's KV tile by the plan table.
-    k_r = k_pad.reshape(B, nkb, bk, D)
-    v_r = v_pad.reshape(B, nkb, bk, D)
-    pos_r = pos_pad.reshape(nkb, bk)
-    table = jnp.asarray(plan.kv_blocks)    # (nq, max_steps) int32
-    flags = jnp.asarray(plan.flags)        # (nq, max_steps) int32
+    # General path: gather each step's KV tile by the plan table — the
+    # same scan body as table_attention_scan (ONE copy, _table_fold).
+    return _table_fold(state, q_blk, k_pad.reshape(B, nkb, bk, D),
+                       v_pad.reshape(B, nkb, bk, D), pos_q,
+                       pos_pad.reshape(nkb, bk),
+                       jnp.asarray(plan.kv_blocks),
+                       jnp.asarray(plan.flags), plan.sched, scale)
 
+
+def _table_fold(state, q_blk, k_r, v_r, pos_q, pos_k, kv_blocks, flags,
+                sched: BandSchedule, scale: float):
+    """Fold step tables into a renorm state: one lax.scan over the table
+    width, gathering each step's KV tile — THE table walk shared by the
+    plan-driven general path and the (sharded) table-driven entry point.
+
+    q_blk: (B, nq, Bq, D); k_r/v_r: (B, nkb, Bk, D); pos_q: (nq, Bq);
+    pos_k: (nkb, Bk); kv_blocks/flags: (nq, W) — table values may be
+    traced (per-device slices under shard_map).
+    """
     def body(st, s):
-        blk = jax.lax.dynamic_index_in_dim(table, s, axis=1,
+        blk = jax.lax.dynamic_index_in_dim(kv_blocks, s, axis=1,
                                            keepdims=False)      # (nq,)
         fl = jax.lax.dynamic_index_in_dim(flags, s, axis=1,
                                           keepdims=False)       # (nq,)
         k_blk = jnp.take(k_r, blk, axis=1)                      # (B,nq,Bk,D)
         v_blk = jnp.take(v_r, blk, axis=1)
-        pos_k = jnp.take(pos_r, blk, axis=0)                    # (nq, Bk)
+        pos_kb = jnp.take(pos_k, blk, axis=0)                   # (nq, Bk)
         scores = _dot(q_blk, k_blk) * scale
-        mask = plan.step_mask(pos_q[:, :, None], pos_k[:, None, :],
-                              fl[:, None, None])
+        mask = sched.step_mask(pos_q[:, :, None], pos_kb[:, None, :],
+                               fl[:, None, None])
         return renorm.update(st, scores, v_blk, mask[None]), ()
 
     state, _ = jax.lax.scan(body, state,
-                            jnp.arange(plan.max_steps, dtype=jnp.int32))
+                            jnp.arange(kv_blocks.shape[1], dtype=jnp.int32))
     return state
+
+
+def table_attention_scan(q, k, v, pos_q, pos_k, kv_blocks, flags,
+                         sched: BandSchedule, scale: float):
+    """Generic table-driven forward on XLA: one ``lax.scan`` over step
+    tables whose *values* may be traced (the sharded per-device tables are
+    selected by ``axis_index`` at run time) and whose q/KV sides may have
+    different lengths (the sharded local view).
+
+    q: (B, nq*Bq, D); k/v: (B, nkb*Bk, D); pos_q: (nq, Bq); pos_k:
+    (nkb, Bk) ORIGINAL positions; kv_blocks/flags: (nq, W). Returns the
+    normalized partial triple ``(out, m, l)`` — the same contract as
+    :func:`repro.kernels.salo_attention.salo_plan_attention`.
+    """
+    B, nQ, D = q.shape
+    nq, _W = kv_blocks.shape
+    bq = nQ // nq
+    nkb, bk = pos_k.shape
+    st = renorm.empty_state((B, nq, bq), D)
+    st = _table_fold(st, q.reshape(B, nq, bq, D),
+                     k.reshape(B, nkb, bk, D), v.reshape(B, nkb, bk, D),
+                     pos_q, pos_k, kv_blocks, flags, sched, scale)
+    out = renorm.finalize(st, q.dtype).reshape(B, nQ, D)
+    return out, st.m.reshape(B, nQ), st.l.reshape(B, nQ)
 
 
 def _global_rows(q_orig, k_orig, v_orig, sched: BandSchedule, scale: float,
@@ -283,36 +319,39 @@ def p_from_stats(scores, mask, m, l):
     return jnp.where(mask, p, 0.0)
 
 
-def bwd_dq_scan(dout, delta, m, l, qw, kw, vw, pos, *,
-                plan: ExecutionPlan, scale: float) -> jax.Array:
-    """dQ pass: one scan over the FORWARD step tables.
+def table_dq_scan(dout, delta, m, l, q, k, v, pos_q, pos_k, kv_blocks,
+                  flags, sched: BandSchedule, scale: float) -> jax.Array:
+    """dQ pass: one scan over (possibly dynamic) FORWARD step tables.
 
     ds = p * (dout.v - delta);  dq_i += scale * sum_j ds_ij k_j
-    (all arrays working-space padded; returns (B, n_pad, D) f32).
+
+    Generic over table *values* and over asymmetric q/KV lengths (the
+    sharded local view streams ``nkb_view`` tiles past ``nq_local`` query
+    blocks): q-side arrays (dout/delta/m/l/q) are (B, nq*Bq, ...), KV-side
+    (k/v) are (B, nkb*Bk, D); pos_q: (nq, Bq); pos_k: (nkb, Bk);
+    kv_blocks/flags: (nq, W). Returns (B, nq*Bq, D) f32.
     """
-    B, n_pad, D = qw.shape
-    nq, bq, bk, nkb = plan.nq, plan.block_q, plan.block_k, plan.nkb
-    q_blk = qw.reshape(B, nq, bq, D)
+    B, nQ, D = q.shape
+    nq, W = kv_blocks.shape
+    bq = nQ // nq
+    nkb, bk = pos_k.shape
+    q_blk = q.reshape(B, nq, bq, D)
     do_blk = dout.reshape(B, nq, bq, D)
     m_blk = m.reshape(B, nq, bq)
     l_blk = l.reshape(B, nq, bq)
     dl_blk = delta.reshape(B, nq, bq)
-    k_r = kw.reshape(B, nkb, bk, D)
-    v_r = vw.reshape(B, nkb, bk, D)
-    pos_q = pos.reshape(nq, bq)
-    pos_r = pos.reshape(nkb, bk)
-    table = jnp.asarray(plan.kv_blocks)
-    flags = jnp.asarray(plan.flags)
+    k_r = k.reshape(B, nkb, bk, D)
+    v_r = v.reshape(B, nkb, bk, D)
 
     def body(dq, s):
-        blk = jax.lax.dynamic_index_in_dim(table, s, 1, keepdims=False)
+        blk = jax.lax.dynamic_index_in_dim(kv_blocks, s, 1, keepdims=False)
         fl = jax.lax.dynamic_index_in_dim(flags, s, 1, keepdims=False)
         k_b = jnp.take(k_r, blk, axis=1)                       # (B,nq,Bk,D)
         v_b = jnp.take(v_r, blk, axis=1)
-        pos_k = jnp.take(pos_r, blk, axis=0)                   # (nq, Bk)
+        pos_kb = jnp.take(pos_k, blk, axis=0)                  # (nq, Bk)
         scores = _dot(q_blk, k_b) * scale
-        mask = plan.step_mask(pos_q[:, :, None], pos_k[:, None, :],
-                              fl[:, None, None])[None]
+        mask = sched.step_mask(pos_q[:, :, None], pos_kb[:, None, :],
+                               fl[:, None, None])[None]
         p = p_from_stats(scores, mask, m_blk, l_blk)
         ds = p * (_dot(do_blk, v_b) - dl_blk[..., None])
         dq = dq + jnp.einsum("bnqk,bnkd->bnqd", ds,
@@ -320,58 +359,88 @@ def bwd_dq_scan(dout, delta, m, l, qw, kw, vw, pos, *,
         return dq, ()
 
     dq0 = jnp.zeros((B, nq, bq, D), jnp.float32)
-    dq, _ = jax.lax.scan(body, dq0,
-                         jnp.arange(plan.max_steps, dtype=jnp.int32))
-    return dq.reshape(B, n_pad, D)
+    dq, _ = jax.lax.scan(body, dq0, jnp.arange(W, dtype=jnp.int32))
+    return dq.reshape(B, nQ, D)
 
 
-def bwd_dkv_scan(dout, delta, m, l, qw, kw, vw, pos, *,
-                 plan: ExecutionPlan, scale: float):
-    """dK/dV pass: one scan over the TRANSPOSED step tables
-    (``plan.transposed()``): each KV tile stays resident while the query
-    blocks that visited it stream past — the exact adjoint walk.
+def bwd_dq_scan(dout, delta, m, l, qw, kw, vw, pos, *,
+                plan: ExecutionPlan, scale: float) -> jax.Array:
+    """Plan-driven dQ (the single-device engine): replay the forward
+    tables. All arrays working-space padded; returns (B, n_pad, D) f32."""
+    pos_q = pos.reshape(plan.nq, plan.block_q)
+    pos_k = pos.reshape(plan.nkb, plan.block_k)
+    return table_dq_scan(dout, delta, m, l, qw, kw, vw, pos_q, pos_k,
+                         jnp.asarray(plan.kv_blocks),
+                         jnp.asarray(plan.flags), plan.sched, scale)
+
+
+def table_dkv_scan(dout, delta, m, l, q, k, v, pos_q, pos_k, row_tile,
+                   q_blocks, flags, sched: BandSchedule, scale: float):
+    """dK/dV pass over PACKED transposed tables: each packed row keeps its
+    owner KV tile (``row_tile``) resident while its slice of visiting query
+    blocks streams past; per-row partials are scatter-added per owner tile
+    (rows split from one ragged transposed row recombine here).
 
     dv_j += sum_i p_ij dout_i;  dk_j += scale * sum_i ds_ij q_i
+
+    Shapes as :func:`table_dq_scan`, plus row_tile: (R,), q_blocks/flags:
+    (R, W). Returns ``(dk, dv)`` both (B, nkb*Bk, D) f32.
     """
-    tp = plan.transposed()
-    B, n_pad, D = qw.shape
-    nq, bq, bk, nkb = plan.nq, plan.block_q, plan.block_k, plan.nkb
-    q_r = qw.reshape(B, nq, bq, D)
+    B, nQ, D = q.shape
+    nq, bq = pos_q.shape
+    nkb, bk = pos_k.shape
+    R, W = q_blocks.shape
+    q_r = q.reshape(B, nq, bq, D)
     do_r = dout.reshape(B, nq, bq, D)
     m_r = m.reshape(B, nq, bq)
     l_r = l.reshape(B, nq, bq)
     dl_r = delta.reshape(B, nq, bq)
-    k_blk = kw.reshape(B, nkb, bk, D)
-    v_blk = vw.reshape(B, nkb, bk, D)
-    pos_q_r = pos.reshape(nq, bq)
-    pos_k = pos.reshape(nkb, bk)
-    table = jnp.asarray(tp.q_blocks)
-    flags = jnp.asarray(tp.flags)
+    k_rt = jnp.take(k.reshape(B, nkb, bk, D), row_tile, axis=1)  # (B,R,Bk,D)
+    v_rt = jnp.take(v.reshape(B, nkb, bk, D), row_tile, axis=1)
+    pos_kr = jnp.take(pos_k, row_tile, axis=0)                   # (R, Bk)
 
     def body(carry, s):
         dk, dv = carry
-        qb = jax.lax.dynamic_index_in_dim(table, s, 1, keepdims=False)
+        qb = jax.lax.dynamic_index_in_dim(q_blocks, s, 1, keepdims=False)
         fl = jax.lax.dynamic_index_in_dim(flags, s, 1, keepdims=False)
-        q_b = jnp.take(q_r, qb, axis=1)                        # (B,nkb,Bq,D)
+        q_b = jnp.take(q_r, qb, axis=1)                        # (B,R,Bq,D)
         do_b = jnp.take(do_r, qb, axis=1)
         m_b = jnp.take(m_r, qb, axis=1)
         l_b = jnp.take(l_r, qb, axis=1)
         dl_b = jnp.take(dl_r, qb, axis=1)
-        pos_qb = jnp.take(pos_q_r, qb, axis=0)                 # (nkb, Bq)
-        scores = _dot(q_b, k_blk) * scale
-        mask = plan.step_mask(pos_qb[:, :, None], pos_k[:, None, :],
-                              fl[:, None, None])[None]
+        pos_qb = jnp.take(pos_q, qb, axis=0)                   # (R, Bq)
+        scores = _dot(q_b, k_rt) * scale
+        mask = sched.step_mask(pos_qb[:, :, None], pos_kr[:, None, :],
+                               fl[:, None, None])[None]
         p = p_from_stats(scores, mask, m_b, l_b)
-        ds = p * (_dot(do_b, v_blk) - dl_b[..., None])
+        ds = p * (_dot(do_b, v_rt) - dl_b[..., None])
         dv = dv + jnp.einsum("bnqk,bnqd->bnkd", p, do_b)
         dk = dk + jnp.einsum("bnqk,bnqd->bnkd", ds,
                              q_b.astype(jnp.float32)) * scale
         return (dk, dv), ()
 
-    z = jnp.zeros((B, nkb, bk, D), jnp.float32)
-    (dk, dv), _ = jax.lax.scan(body, (z, z),
-                               jnp.arange(tp.max_steps, dtype=jnp.int32))
-    return dk.reshape(B, n_pad, D), dv.reshape(B, n_pad, D)
+    z = jnp.zeros((B, R, bk, D), jnp.float32)
+    (dk_r, dv_r), _ = jax.lax.scan(body, (z, z),
+                                   jnp.arange(W, dtype=jnp.int32))
+    zt = jnp.zeros((B, nkb, bk, D), jnp.float32)
+    dk = zt.at[:, row_tile].add(dk_r).reshape(B, nkb * bk, D)
+    dv = zt.at[:, row_tile].add(dv_r).reshape(B, nkb * bk, D)
+    return dk, dv
+
+
+def bwd_dkv_scan(dout, delta, m, l, qw, kw, vw, pos, *,
+                 plan: ExecutionPlan, scale: float):
+    """Plan-driven dK/dV (the single-device engine): walk
+    ``plan.transposed_packed()`` — the exact adjoint regrouping of the
+    forward's deduplicated visits, packed so global-column tiles' ragged
+    rows don't inflate everyone's padding."""
+    pk = plan.transposed_packed()
+    pos_q = pos.reshape(plan.nq, plan.block_q)
+    pos_k = pos.reshape(plan.nkb, plan.block_k)
+    return table_dkv_scan(dout, delta, m, l, qw, kw, vw, pos_q, pos_k,
+                          jnp.asarray(pk.row_tile),
+                          jnp.asarray(pk.q_blocks), jnp.asarray(pk.flags),
+                          plan.sched, scale)
 
 
 def plan_backward(g, q, k, v, out_w, m, l, plan: ExecutionPlan, scale: float,

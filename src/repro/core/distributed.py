@@ -1,129 +1,35 @@
-"""Sequence-parallel hybrid sparse attention (shard_map + halo exchange).
+"""Sequence-parallel attention — retired prototype, now a thin shim.
 
-The paper's window splitting (Eq. 2) applied at *datacenter* scale: shard the
-sequence across mesh devices; each device computes the attention partials for
-its local queries, and the banded structure means a query near a shard edge
-only needs K/V from the **adjacent** shard(s) — a halo exchange via
-``ppermute``, not an all-gather. Global tokens live on shard 0 and are
-broadcast once (the paper's global PE row/column tapping the stream).
+The original module computed dense-tile XLA partials per shard (1-D
+patterns only, ``dilation == 1`` asserted, windows clamped to one shard,
+forward-only) and had two real bugs: global tokens were read as
+``k_local[:, :g]`` on shard 0, silently truncating whenever
+``g > n_local``, and ``_local_banded`` accepted ``block_q``/``block_k``
+parameters it never used. All of it is superseded by
+:mod:`repro.dist.sharded_plan`, which slices the ExecutionPlan IR per
+shard and runs the *fused* engines under ``shard_map`` (ppermute halo
+exchange, psum-broadcast global tiles keyed by owner — no shard-0
+assumption — multi-hop halos, dilation, 2-D patterns, and the full
+fused backward).
 
-Traffic per device per layer: ``halo = (w + Bk) * d`` bytes to neighbors +
-one small broadcast — independent of sequence length, vs ``n*d`` for
-all-gather ring attention. For long_500k with w=4096 that is a 128x
-collective-byte reduction (quantified in EXPERIMENTS.md §Perf).
-
-Restrictions (asserted): 1-D patterns, dilation folded in by the caller,
-window must fit within one neighbor shard (w <= n_local), bidirectional
-windows exchange halos on both sides.
+This shim keeps the old entry point importable; new code should call
+:func:`repro.dist.sharded_plan.sharded_attention` directly.
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax
-import jax.numpy as jnp
-from jax.sharding import Mesh, PartitionSpec as P
+from jax.sharding import Mesh
 
-from repro.compat import shard_map
-
-from repro.core import renorm
-from repro.core.blockwise import blockwise_attention, _dot
 from repro.core.patterns import HybridSparsePattern
-from repro.core.scheduler import PAD_SENTINEL, schedule
-
-
-def _local_banded(q, k, v, pos_q, pos_k, pattern, scale, block_q, block_k):
-    """Dense-tiles banded partial on local (q x k) with position masks.
-    q: (B, nq, D); k/v: (B, nk, D). Returns PartialState over (B, nq)."""
-    sched = schedule(pattern, 1 << 30)  # masks only depend on the pattern
-    state = renorm.empty_state(q.shape[:-1], v.shape[-1])
-    scores = _dot(q, k) * scale
-    mask = sched.window_mask(pos_q[:, None], pos_k[None, :])
-    # window_mask checks pos < n with n=1<<30: padding handled by caller
-    return renorm.update(state, scores, v, mask[None])
+from repro.dist.sharded_plan import sharded_attention
 
 
 def sequence_parallel_attention(
         q: jax.Array, k: jax.Array, v: jax.Array,
         pattern: HybridSparsePattern, mesh: Mesh, axis: str = "data", *,
         scale: Optional[float] = None) -> jax.Array:
-    """q/k/v: (B, N, D) sharded on N over ``axis``. Causal or bidirectional
-    sliding window + leading-global patterns."""
-    assert not pattern.is_2d and pattern.dilation == 1
-    B, N, D = q.shape
-    scale_ = (D ** -0.5) if scale is None else scale
-    n_shards = mesh.shape[axis]
-    n_local = N // n_shards
-    a, b = pattern.window
-    a = max(a, -(N - 1))
-    b = min(b, 0 if pattern.causal else N - 1)
-    g = pattern.n_global
-    assert -a <= n_local and b <= n_local, (
-        f"window ({a},{b}) must fit in one shard (n_local={n_local})")
-
-    def local_fn(q_l, k_l, v_l):
-        idx = jax.lax.axis_index(axis)
-        pos_l = idx * n_local + jnp.arange(n_local)
-
-        # halo exchange: neighbor K/V + neighbor positions
-        right = [(i, (i + 1) % n_shards) for i in range(n_shards)]
-        left = [(i, (i - 1) % n_shards) for i in range(n_shards)]
-        k_prev = jax.lax.ppermute(k_l, axis, right)   # from idx-1
-        v_prev = jax.lax.ppermute(v_l, axis, right)
-        state = _local_banded(q_l, k_l, v_l, pos_l, pos_l, pattern, scale_,
-                              0, 0)
-        pos_prev = pos_l - n_local  # idx==0 receives wrap: mask via pos<0
-        pos_prev = jnp.where(pos_prev < 0, jnp.int32(PAD_SENTINEL),
-                             pos_prev)
-        st_prev = _local_banded(q_l, k_prev, v_prev, pos_l, pos_prev,
-                                pattern, scale_, 0, 0)
-        state = renorm.merge(state, st_prev)
-        if not pattern.causal and b > 0:
-            k_next = jax.lax.ppermute(k_l, axis, left)
-            v_next = jax.lax.ppermute(v_l, axis, left)
-            pos_next = pos_l + n_local
-            pos_next = jnp.where(pos_next >= N,
-                                 jnp.int32(PAD_SENTINEL), pos_next)
-            st_next = _local_banded(q_l, k_next, v_next, pos_l, pos_next,
-                                    pattern, scale_, 0, 0)
-            state = renorm.merge(state, st_next)
-
-        # global column: shard 0 broadcasts its leading g keys
-        if g > 0:
-            kg = jnp.where(jax.lax.axis_index(axis) == 0, 1.0, 0.0)
-            k_g = jax.lax.psum(k_l[:, :g] * kg.astype(k_l.dtype), axis)
-            v_g = jax.lax.psum(v_l[:, :g] * kg.astype(v_l.dtype), axis)
-            sched = schedule(pattern, 1 << 30)
-            scores = _dot(q_l, k_g) * scale_
-            gmask = sched.global_col_mask(pos_l[:, None],
-                                          jnp.arange(g)[None, :])
-            state = renorm.update(state, scores, v_g, gmask[None])
-
-        out = renorm.finalize(state, q_l.dtype)
-
-        # global rows: shard 0's first g queries attend everything.
-        if g > 0 and pattern.global_rows:
-            qg = jax.lax.psum(q_l[:, :g] * kg.astype(q_l.dtype), axis)
-            sg = _dot(qg, k_l) * scale_
-            if pattern.causal:
-                cm = pos_l[None, :] <= jnp.arange(g)[:, None]
-                sg = jnp.where(cm[None], sg, renorm.NEG_INF)
-            stg = renorm.empty_state((B, g), D)
-            stg = renorm.update(stg, sg, v_l)
-            # merge across shards via psum on the state triple
-            m_max = jax.lax.pmax(stg.m, axis)
-            corr = jnp.exp(stg.m - m_max)
-            acc = jax.lax.psum(stg.acc * corr[..., None], axis)
-            l = jax.lax.psum(stg.l * corr, axis)
-            rows = (acc / jnp.maximum(l, 1e-30)[..., None]).astype(out.dtype)
-            out = jnp.where((jax.lax.axis_index(axis) == 0)
-                            & (jnp.arange(n_local) < g)[None, :, None],
-                            jnp.pad(rows, ((0, 0), (0, n_local - g), (0, 0))),
-                            out)
-        return out
-
-    fn = shard_map(local_fn, mesh=mesh,
-                   in_specs=(P(None, axis, None),) * 3,
-                   out_specs=P(None, axis, None), check_vma=False)
-    return fn(q, k, v)
+    """q/k/v: (B, N, D) sharded on N over ``axis``. Delegates to the
+    ShardedPlan engine (any pattern the single-device plan supports)."""
+    return sharded_attention(q, k, v, pattern, mesh, axis, scale=scale)

@@ -33,6 +33,15 @@ into per-KV-block step tables (``plan.transposed()``), walked by the dK/dV
 backward kernel; the dQ backward kernel replays the forward tables. Gradients
 ride the paper's data-scheduler schedule symmetrically — no extra tiles.
 
+**PackedTransposedPlan** (``plan.transposed_packed()``): the transposed
+tables re-laid-out for execution. The raw transposed tables are ragged —
+a global-column KV tile's row spans *every* query block, so rectangular
+padding to ``max_steps`` inflates the dK/dV walk for all other tiles. The
+packed layout splits overlong rows into several fixed-width rows that share
+one owner tile (``row_tile``) and drops never-visited tiles entirely;
+per-row partials are scatter-added back per owner tile. Same visits, same
+flags — only the grid shape changes.
+
 **ChunkPlan** (the serving prefill IR): a causal chunk-slice of the plan —
 queries ``[c0, c1)`` of a prompt against the request's paged ring-cache view
 plus the chunk itself (``build_chunk_plan``), so prefill is
@@ -207,9 +216,14 @@ class BandSchedule:
         return m
 
     # ------------------------------------------------------------------ #
-    def plan(self, block_q: int, block_k: int) -> "ExecutionPlan":
-        """Lower this schedule into the deduplicated step-table IR."""
-        return build_plan(self, block_q, block_k)
+    def plan(self, block_q: int, block_k: int,
+             pad_multiple: int = 1) -> "ExecutionPlan":
+        """Lower this schedule into the deduplicated step-table IR.
+
+        ``pad_multiple`` additionally aligns ``n_pad`` (sequence parallelism
+        pads to ``n_shards * lcm(block_q, block_k)`` so every shard owns the
+        same number of whole query blocks AND KV tiles)."""
+        return build_plan(self, block_q, block_k, pad_multiple)
 
     def work_estimate(self, block_q: int, block_k: int) -> dict:
         """Tile-level work accounting (drives the utilization benchmark).
@@ -304,13 +318,17 @@ class ExecutionPlan:
     num_steps: np.ndarray     # (nq,) int32 — real (non-padding) steps
 
     def __hash__(self):
-        return hash((self.sched, self.block_q, self.block_k))
+        # n_pad participates: the same (schedule, blocks) at a different
+        # pad_multiple is a DIFFERENT plan (more padded rows/tiles) and must
+        # not alias it in jit static-arg or transposed-plan caches.
+        return hash((self.sched, self.block_q, self.block_k, self.n_pad))
 
     def __eq__(self, other):
         return (isinstance(other, ExecutionPlan)
                 and self.sched == other.sched
                 and self.block_q == other.block_q
-                and self.block_k == other.block_k)
+                and self.block_k == other.block_k
+                and self.n_pad == other.n_pad)
 
     # ------------------------------------------------------------------ #
     def positions_padded(self) -> np.ndarray:
@@ -326,6 +344,11 @@ class ExecutionPlan:
         """The adjoint walk: per-KV-block step tables (cached, see
         :func:`build_transposed`). The dK/dV backward kernel's schedule."""
         return build_transposed(self)
+
+    def transposed_packed(self) -> "PackedTransposedPlan":
+        """The transposed walk re-packed to a fixed row width (cached, see
+        :func:`build_packed_transposed`) — what the dK/dV engines execute."""
+        return build_packed_transposed(self)
 
     # ------------------------------------------------------------------ #
     def stats(self) -> dict:
@@ -344,6 +367,7 @@ class ExecutionPlan:
         per_band_tiles = self.nq * per_band_steps
         per_band_launches = len(self.sched.bands)
         tp = self.transposed()
+        pk = self.transposed_packed()
         return dict(
             q_blocks=self.nq,
             kv_steps_per_q_block=self.max_steps,
@@ -363,12 +387,18 @@ class ExecutionPlan:
             bwd_dkv_tiles=int(tp.num_steps.sum()),
             bwd_kv_steps_per_kv_block=tp.max_steps,
             bwd_launches=2,
+            # Packed dK/dV layout: padded grid cells before/after packing
+            # (global-column patterns pay the ragged transposed rows — the
+            # global tile's row spans every q block — unless packed).
+            bwd_dkv_grid_unpacked=self.nkb * tp.max_steps,
+            bwd_dkv_grid_packed=pk.n_rows * pk.width,
+            bwd_dkv_pack_ratio=(self.nkb * tp.max_steps)
+            / max(pk.n_rows * pk.width, 1),
         )
 
 
-@functools.lru_cache(maxsize=256)
-def build_plan(sched: BandSchedule, block_q: int,
-               block_k: int) -> ExecutionPlan:
+def build_plan(sched: BandSchedule, block_q: int, block_k: int,
+               pad_multiple: int = 1) -> ExecutionPlan:
     """Lower a band schedule into the deduplicated ExecutionPlan.
 
     Correctness of the dedup (why one visit per tile suffices): every
@@ -379,8 +409,22 @@ def build_plan(sched: BandSchedule, block_q: int,
     pair lives in exactly one KV tile and each tile is visited at most once,
     applying the union mask (window | global-column) at the visit counts
     each pair exactly once — no cross-band double counting, no misses.
+
+    ``pad_multiple`` extends the tile-grid padding (see
+    :meth:`BandSchedule.plan`); padded rows/tiles carry ``PAD_SENTINEL``
+    positions and mask to nothing, exactly like block-alignment padding.
     """
-    n_pad = _round_up(sched.n_work, max(block_q, block_k))
+    # Normalized through one cached entry point so build_plan(s, bq, bk)
+    # and s.plan(bq, bk) return the IDENTICAL object (single source of
+    # truth for both engines, asserted by the plan contract tests).
+    return _build_plan(sched, block_q, block_k, int(pad_multiple))
+
+
+@functools.lru_cache(maxsize=256)
+def _build_plan(sched: BandSchedule, block_q: int, block_k: int,
+                pad_multiple: int) -> ExecutionPlan:
+    n_pad = _round_up(sched.n_work,
+                      math.lcm(max(block_q, block_k), pad_multiple))
     nq = n_pad // block_q
     nkb = n_pad // block_k
     pos = np.full(n_pad, BIG, dtype=np.int32)
@@ -691,3 +735,78 @@ def build_transposed(plan: ExecutionPlan) -> TransposedPlan:
             flags[j, s] = fl
     return TransposedPlan(plan=plan, max_steps=max_steps, q_blocks=q_blocks,
                           flags=flags, num_steps=num_steps)
+
+
+# ---------------------------------------------------------------------- #
+# PackedTransposedPlan — the dK/dV walk without the ragged-row tax
+# ---------------------------------------------------------------------- #
+@dataclasses.dataclass(frozen=True, eq=False)
+class PackedTransposedPlan:
+    """The transposed walk packed to fixed-width rows.
+
+    ``row_tile[r]`` names the KV tile packed row ``r`` accumulates into;
+    rows longer than ``width`` in the raw transposed tables are split into
+    several packed rows sharing one ``row_tile`` (their partial dK/dV are
+    scatter-added per owner tile by the engines), and tiles visited by no
+    query block get no row at all. Total real steps stay exactly the
+    forward plan's ``executed_tiles`` — packing only reshapes the grid.
+    """
+    plan: Optional[ExecutionPlan]
+    width: int
+    n_rows: int
+    row_tile: np.ndarray   # (n_rows,) int32 — owner KV tile per packed row
+    q_blocks: np.ndarray   # (n_rows, width) int32 (0 = padding step)
+    flags: np.ndarray      # (n_rows, width) int32 (0 = padding no-op)
+    num_steps: np.ndarray  # (n_rows,) int32
+
+    def __hash__(self):
+        return hash(("packed", self.plan))
+
+    def __eq__(self, other):
+        return (isinstance(other, PackedTransposedPlan)
+                and self.plan is not None and self.plan == other.plan)
+
+
+def pack_rows(rows, width: Optional[int] = None):
+    """Pack ragged per-tile visit lists into fixed-width owner-tagged rows.
+
+    ``rows[j]`` is the list of ``(q_block, flags)`` visits of KV tile ``j``.
+    Returns ``(row_tile, q_blocks, flags, num_steps, width)`` numpy arrays.
+    ``width`` defaults to the 95th-percentile nonzero row length — band rows
+    (all of near-equal length) stay one row each, while the global-column
+    tile's every-q-block row is split instead of padding everyone to it.
+    """
+    lens = np.asarray([len(r) for r in rows], dtype=np.int64)
+    nz = lens[lens > 0]
+    if width is None:
+        width = int(np.ceil(np.percentile(nz, 95))) if nz.size else 1
+    width = max(1, int(width))
+    packed = []  # (tile, [(q, fl), ...]) chunks
+    for j, row in enumerate(rows):
+        for c0 in range(0, len(row), width):
+            packed.append((j, row[c0: c0 + width]))
+    if not packed:
+        packed = [(0, [])]
+    n_rows = len(packed)
+    row_tile = np.asarray([t for t, _ in packed], dtype=np.int32)
+    q_blocks = np.zeros((n_rows, width), dtype=np.int32)
+    flags = np.zeros((n_rows, width), dtype=np.int32)
+    num_steps = np.asarray([len(c) for _, c in packed], dtype=np.int32)
+    for r, (_, chunk) in enumerate(packed):
+        for s, (i, fl) in enumerate(chunk):
+            q_blocks[r, s] = i
+            flags[r, s] = fl
+    return row_tile, q_blocks, flags, num_steps, width
+
+
+@functools.lru_cache(maxsize=256)
+def build_packed_transposed(plan: ExecutionPlan) -> PackedTransposedPlan:
+    """Pack :func:`build_transposed`'s tables (pure table surgery again)."""
+    tp = build_transposed(plan)
+    rows = [[(int(tp.q_blocks[j, s]), int(tp.flags[j, s]))
+             for s in range(int(tp.num_steps[j]))] for j in range(plan.nkb)]
+    row_tile, q_blocks, flags, num_steps, width = pack_rows(rows)
+    return PackedTransposedPlan(plan=plan, width=width,
+                                n_rows=row_tile.shape[0], row_tile=row_tile,
+                                q_blocks=q_blocks, flags=flags,
+                                num_steps=num_steps)

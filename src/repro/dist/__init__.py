@@ -1,10 +1,16 @@
-"""Distributed substrate: logical-axis sharding rules and gradient
-compression.
+"""Distributed substrate: logical-axis sharding rules, sequence-parallel
+attention, and gradient compression.
 
 * :mod:`repro.dist.sharding` — named logical axes ("batch", "seq", "heads",
   ...) resolved to mesh axes through per-cell rule dicts, plus path-regex
   parameter shardings. Model code only ever names logical axes
   (:func:`repro.dist.sharding.constrain`); the launcher decides the mapping.
+  :func:`repro.dist.sharding.sequence_mesh_axis` reports when the "seq"
+  axis is live so attention can switch engines.
+* :mod:`repro.dist.sharded_plan` — the ShardedPlan IR: the fused
+  ExecutionPlan kernels run per sequence shard under ``shard_map`` with
+  ppermute halo exchange of neighbor KV tiles and psum-broadcast global
+  tiles, forward and backward (reverse-ppermute gradient returns).
 * :mod:`repro.dist.compression` — int8 gradient compression with error
   feedback for cross-pod all-reduce.
 """

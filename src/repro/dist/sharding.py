@@ -97,19 +97,24 @@ def _axes_product(mesh: Mesh, entry) -> int:
     return math.prod(sizes.get(a, 1) for a in axes)
 
 
-def _mesh_clean(mesh: Mesh, spec: P, shape) -> P:
+def _mesh_clean(mesh: Mesh, spec: P, shape=None) -> P:
     """Drop axes missing from the mesh, not dividing their dimension, or
     already consumed by an earlier dimension (a mesh axis may shard at most
-    one positional dimension)."""
-    entries = list(spec) + [None] * (len(shape) - len(spec))
+    one positional dimension). With ``shape=None`` (shape unknown) the
+    divisibility check is skipped — membership and reuse still apply."""
+    if shape is None:
+        entries, dims = list(spec), [None] * len(spec)
+    else:
+        entries = list(spec) + [None] * (len(shape) - len(spec))
+        dims = list(shape)
     out = []
     used: set = set()
-    for e, dim in zip(entries, shape):
+    for e, dim in zip(entries, dims):
         axes = (e if isinstance(e, tuple) else (e,) if e else ())
         axes = tuple(a for a in axes
                      if a in mesh.axis_names and a not in used)
         p = _axes_product(mesh, axes)
-        if axes and p > 1 and dim % p == 0:
+        if axes and p > 1 and (dim is None or dim % p == 0):
             used.update(axes)
             out.append(axes)
         else:
@@ -132,11 +137,41 @@ def constrain(x: jax.Array, *logical) -> jax.Array:
     return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
 
 
-def input_sharding(mesh: Mesh, rules: Dict[str, Any], *logical):
-    """NamedSharding for an input by logical names (none -> replicated)."""
+def input_sharding(mesh: Mesh, rules: Dict[str, Any], *logical,
+                   shape=None):
+    """NamedSharding for an input by logical names (none -> replicated).
+
+    Always ``_mesh_clean``'d: rules may name mesh axes that don't exist on
+    this mesh (e.g. the default ``("pod", "data")`` batch rule on a 2-axis
+    host mesh) or don't divide the dimension — pjit *argument* shardings
+    (unlike constraints) reject both, so they are dropped here. Pass
+    ``shape`` to enable the divisibility check (the single source of truth
+    formerly duplicated as ``launch.specs._divisible``).
+    """
     with axis_rules(rules):
         spec = resolve(*logical)
-    return NamedSharding(mesh, P(*spec))
+    return NamedSharding(mesh, _mesh_clean(mesh, spec, shape))
+
+
+def sequence_mesh_axis():
+    """(mesh, axis) when the active rules map "seq" onto exactly one mesh
+    axis of size > 1 — the signal for :mod:`repro.dist.sharded_plan` to run
+    attention sequence-parallel (halo exchange instead of the all-gather
+    pjit would otherwise insert). Returns None outside such a context."""
+    rules = current_rules()
+    if not rules:
+        return None
+    e = rules.get("seq")
+    axes = e if isinstance(e, tuple) else ((e,) if e else ())
+    if len(axes) != 1:
+        return None
+    mesh = _ambient_mesh()
+    if mesh is None or mesh.empty:
+        return None
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    if sizes.get(axes[0], 1) <= 1:
+        return None
+    return mesh, axes[0]
 
 
 # ------------------------ parameter shardings --------------------------- #

@@ -45,7 +45,8 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.compat import tpu_compiler_params
-from repro.core.scheduler import ExecutionPlan, STEP_GLOBAL, STEP_WINDOW
+from repro.core.scheduler import (BandSchedule, ExecutionPlan, STEP_GLOBAL,
+                                  STEP_WINDOW)
 
 NEG_INF = -1e30
 LANES = 128  # TPU vector lane count; m/l scratch is lane-replicated
@@ -55,10 +56,9 @@ def _kernel(kvt_ref, flg_ref,                           # scalar prefetch
             pos_q_ref, pos_k_ref, q_ref, k_ref, v_ref,  # inputs
             out_ref, m_ref, l_ref,                      # outputs
             acc_ref, m_scr, l_scr,                      # VMEM scratch
-            *, plan: ExecutionPlan, scale: float):
+            *, sched: BandSchedule, steps: int, scale: float):
     i = pl.program_id(1)
     s = pl.program_id(2)
-    steps = plan.max_steps
 
     @pl.when(s == 0)
     def _init():
@@ -76,7 +76,7 @@ def _kernel(kvt_ref, flg_ref,                           # scalar prefetch
     fl = flg_ref[i * steps + s]                      # int32 scalar
     pos_q = pos_q_ref[0]                             # (Bq,) int32
     pos_k = pos_k_ref[0]                             # (Bk,) int32
-    mask = plan.step_mask(pos_q[:, None], pos_k[None, :], fl)
+    mask = sched.step_mask(pos_q[:, None], pos_k[None, :], fl)
 
     scores = jnp.where(mask, scores, NEG_INF)
 
@@ -115,27 +115,30 @@ def _kernel(kvt_ref, flg_ref,                           # scalar prefetch
         l_ref[0] = l_scr[...][:, 0]
 
 
-@functools.partial(jax.jit, static_argnames=("plan", "scale", "interpret"))
-def salo_plan_attention(q: jax.Array, k: jax.Array, v: jax.Array,
-                        pos: jax.Array, *, plan: ExecutionPlan,
-                        scale: Optional[float] = None,
-                        interpret: bool = False):
-    """The whole hybrid pattern (all bands + global column) in ONE launch.
+@functools.partial(jax.jit, static_argnames=("sched", "block_q", "block_k",
+                                             "scale", "interpret"))
+def salo_table_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                         pos_q: jax.Array, pos_k: jax.Array,
+                         kvt: jax.Array, flg: jax.Array, *,
+                         sched: BandSchedule, block_q: int, block_k: int,
+                         scale: float, interpret: bool = False):
+    """The table-driven launch with the step tables as *traced operands*.
 
-    q/k/v: (B, n_pad, D) padded working-space inputs; pos: (n_pad,) original
-    positions. Returns (out, m, l): normalized output and softmax stats — a
-    mergeable partial (out*l rebuilds `renorm.PartialState.acc`).
+    The tables only reach the kernel through scalar prefetch, so their
+    values may be runtime data — e.g. a per-device slice of the
+    ShardedPlan's stacked tables selected by ``axis_index`` under
+    ``shard_map``. The q side and KV side may differ in length (the sharded
+    local view streams ``nkb_view`` tiles past ``nq_local`` query blocks).
+
+    q: (B, nq*block_q, D); k/v: (B, nkb*block_k, D); pos_q: (nq, block_q);
+    pos_k: (nkb, block_k); kvt/flg: (nq*steps,) int32 flattened tables.
+    Returns (out, m, l) exactly like :func:`salo_plan_attention`.
     """
-    B, n_pad, D = q.shape
-    assert n_pad == plan.n_pad, (n_pad, plan.n_pad)
-    block_q, block_k = plan.block_q, plan.block_k
-    scale = (D ** -0.5) if scale is None else scale
-    nq, nkb, steps = plan.nq, plan.nkb, plan.max_steps
-
-    kvt = jnp.asarray(plan.kv_blocks.reshape(-1))    # (nq*steps,) int32
-    flg = jnp.asarray(plan.flags.reshape(-1))
-    pos_q = pos.reshape(nq, block_q)
-    pos_k = pos.reshape(nkb, block_k)
+    B, nQ, D = q.shape
+    assert nQ % block_q == 0 and k.shape[1] % block_k == 0, \
+        (nQ, block_q, k.shape[1], block_k)
+    nq = nQ // block_q
+    steps = kvt.shape[0] // nq
 
     def kv_idx(b, i, s, kvt_ref, flg_ref):
         return (b, kvt_ref[i * steps + s], 0)
@@ -169,14 +172,14 @@ def salo_plan_attention(q: jax.Array, k: jax.Array, v: jax.Array,
         ],
     )
 
-    kern = functools.partial(_kernel, plan=plan, scale=scale)
+    kern = functools.partial(_kernel, sched=sched, steps=steps, scale=scale)
     out, m, l = pl.pallas_call(
         kern,
         grid_spec=grid_spec,
         out_shape=[
-            jax.ShapeDtypeStruct((B, n_pad, D), q.dtype),
-            jax.ShapeDtypeStruct((B, n_pad), jnp.float32),
-            jax.ShapeDtypeStruct((B, n_pad), jnp.float32),
+            jax.ShapeDtypeStruct((B, nQ, D), q.dtype),
+            jax.ShapeDtypeStruct((B, nQ), jnp.float32),
+            jax.ShapeDtypeStruct((B, nQ), jnp.float32),
         ],
         compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
@@ -184,3 +187,26 @@ def salo_plan_attention(q: jax.Array, k: jax.Array, v: jax.Array,
         name="salo_plan_attention",
     )(kvt, flg, pos_q, pos_k, q, k, v)
     return out, m, l
+
+
+def salo_plan_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                        pos: jax.Array, *, plan: ExecutionPlan,
+                        scale: Optional[float] = None,
+                        interpret: bool = False):
+    """The whole hybrid pattern (all bands + global column) in ONE launch.
+
+    q/k/v: (B, n_pad, D) padded working-space inputs; pos: (n_pad,) original
+    positions. Returns (out, m, l): normalized output and softmax stats — a
+    mergeable partial (out*l rebuilds `renorm.PartialState.acc`).
+    """
+    B, n_pad, D = q.shape
+    assert n_pad == plan.n_pad, (n_pad, plan.n_pad)
+    scale = (D ** -0.5) if scale is None else scale
+    return salo_table_attention(
+        q, k, v,
+        pos.reshape(plan.nq, plan.block_q),
+        pos.reshape(plan.nkb, plan.block_k),
+        jnp.asarray(plan.kv_blocks.reshape(-1)),
+        jnp.asarray(plan.flags.reshape(-1)),
+        sched=plan.sched, block_q=plan.block_q, block_k=plan.block_k,
+        scale=scale, interpret=interpret)

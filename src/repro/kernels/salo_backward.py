@@ -10,13 +10,16 @@ probabilities from the forward's saved partial triple ``(out, m, l)``
   the query tile, its cotangent and row stats stay resident while the
   plan's deduplicated KV tiles stream past, accumulating
   ``dq_i += scale * sum_j ds_ij k_j`` with ``ds = p * (dout.v - delta)``.
-* **dK/dV kernel** — walks the TRANSPOSED plan
-  (:meth:`ExecutionPlan.transposed`, grid ``(B, nkb, max_steps_t)``): each
-  KV tile stays resident while the query blocks that visited it stream
-  past, accumulating ``dv_j += sum_i p_ij dout_i`` and
-  ``dk_j += scale * sum_i ds_ij q_i``. The transposed tables are the exact
-  adjoint regrouping of the forward's deduplicated visits — same total
-  tiles, no extra work.
+* **dK/dV kernel** — walks the PACKED transposed plan
+  (:meth:`ExecutionPlan.transposed_packed`, grid ``(B, n_rows, width)``):
+  each packed row keeps its owner KV tile resident while its slice of
+  visiting query blocks streams past, accumulating
+  ``dv_j += sum_i p_ij dout_i`` and ``dk_j += scale * sum_i ds_ij q_i``;
+  per-row partials are scatter-added per owner tile afterwards. The
+  transposed tables are the exact adjoint regrouping of the forward's
+  deduplicated visits — same total tiles, no extra work — and packing
+  keeps global-column patterns (whose global KV tile is visited by every
+  query block) from padding every other row to that ragged width.
 
 The ``delta = sum(dout * out)`` rowwise precompute and every host-step
 adjoint (global rows, reorder, pad) live in
@@ -41,7 +44,7 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.compat import tpu_compiler_params
 from repro.core.renorm import NEG_INF
-from repro.core.scheduler import ExecutionPlan
+from repro.core.scheduler import BandSchedule, ExecutionPlan
 
 
 def _p_ds(scores, mask, m_row, l_row, dp, delta):
@@ -61,10 +64,9 @@ def _dq_kernel(kvt_ref, flg_ref,                                # prefetch
                do_ref, m_ref, l_ref, delta_ref,
                dq_ref,                                          # output
                acc_ref,                                         # scratch
-               *, plan: ExecutionPlan, scale: float):
+               *, sched: BandSchedule, steps: int, scale: float):
     i = pl.program_id(1)
     s = pl.program_id(2)
-    steps = plan.max_steps
 
     @pl.when(s == 0)
     def _init():
@@ -79,7 +81,7 @@ def _dq_kernel(kvt_ref, flg_ref,                                # prefetch
         preferred_element_type=jnp.float32) * scale  # (Bq, Bk)
 
     fl = flg_ref[i * steps + s]
-    mask = plan.step_mask(pos_q_ref[0][:, None], pos_k_ref[0][None, :], fl)
+    mask = sched.step_mask(pos_q_ref[0][:, None], pos_k_ref[0][None, :], fl)
     dp = jax.lax.dot_general(
         do, v.astype(jnp.float32), (((1,), (1,)), ((), ())),
         preferred_element_type=jnp.float32)          # (Bq, Bk)
@@ -94,15 +96,14 @@ def _dq_kernel(kvt_ref, flg_ref,                                # prefetch
         dq_ref[0] = acc_ref[...].astype(dq_ref.dtype)
 
 
-def _dkv_kernel(qbt_ref, flg_ref,                               # prefetch
+def _dkv_kernel(rt_ref, qbt_ref, flg_ref,                       # prefetch
                 pos_k_ref, pos_q_ref, q_ref, k_ref, v_ref,      # inputs
                 do_ref, m_ref, l_ref, delta_ref,
                 dk_ref, dv_ref,                                 # outputs
                 dk_acc, dv_acc,                                 # scratch
-                *, plan: ExecutionPlan, scale: float):
-    j = pl.program_id(1)
+                *, sched: BandSchedule, steps: int, scale: float):
+    r = pl.program_id(1)
     s = pl.program_id(2)
-    steps = plan.transposed().max_steps
 
     @pl.when(s == 0)
     def _init():
@@ -117,8 +118,8 @@ def _dkv_kernel(qbt_ref, flg_ref,                               # prefetch
         q, k, (((1,), (1,)), ((), ())),
         preferred_element_type=jnp.float32) * scale  # (Bq, Bk)
 
-    fl = flg_ref[j * steps + s]
-    mask = plan.step_mask(pos_q_ref[0][:, None], pos_k_ref[0][None, :], fl)
+    fl = flg_ref[r * steps + s]
+    mask = sched.step_mask(pos_q_ref[0][:, None], pos_k_ref[0][None, :], fl)
     dp = jax.lax.dot_general(
         do, v.astype(jnp.float32), (((1,), (1,)), ((), ())),
         preferred_element_type=jnp.float32)
@@ -138,22 +139,23 @@ def _dkv_kernel(qbt_ref, flg_ref,                               # prefetch
         dv_ref[0] = dv_acc[...].astype(dv_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("plan", "scale", "interpret"))
-def salo_plan_backward_dq(dout, delta, m, l, q, k, v, pos, *,
-                          plan: ExecutionPlan, scale: float,
-                          interpret: bool = False) -> jax.Array:
-    """dQ in ONE launch over the forward plan. All arrays working-space
-    padded: q/k/v/dout (B, n_pad, D); delta/m/l (B, n_pad); pos (n_pad,).
+@functools.partial(jax.jit, static_argnames=("sched", "block_q", "block_k",
+                                             "scale", "interpret"))
+def salo_table_backward_dq(dout, delta, m, l, q, k, v, pos_q, pos_k,
+                           kvt, flg, *, sched: BandSchedule, block_q: int,
+                           block_k: int, scale: float,
+                           interpret: bool = False) -> jax.Array:
+    """dQ in ONE launch over forward step tables passed as traced operands
+    (the ShardedPlan per-device slice under ``shard_map``, or the plan's
+    own tables via :func:`salo_plan_backward_dq`). The q side
+    (q/dout/delta/m/l, length nq*block_q) and KV side (k/v, length
+    nkb*block_k) may differ; kvt/flg: (nq*steps,) int32.
     """
-    B, n_pad, D = q.shape
-    assert n_pad == plan.n_pad, (n_pad, plan.n_pad)
-    bq, bk = plan.block_q, plan.block_k
-    nq, nkb, steps = plan.nq, plan.nkb, plan.max_steps
-
-    kvt = jnp.asarray(plan.kv_blocks.reshape(-1))    # (nq*steps,) int32
-    flg = jnp.asarray(plan.flags.reshape(-1))
-    pos_q = pos.reshape(nq, bq)
-    pos_k = pos.reshape(nkb, bk)
+    B, nQ, D = q.shape
+    bq, bk = block_q, block_k
+    nq = nQ // bq
+    nkb = k.shape[1] // bk
+    steps = kvt.shape[0] // nq
 
     def q_idx(b, i, s, kvt_ref, flg_ref):
         return (b, i, 0)
@@ -185,11 +187,12 @@ def salo_plan_backward_dq(dout, delta, m, l, q, k, v, pos, *,
         scratch_shapes=[pltpu.VMEM((bq, D), jnp.float32)],
     )
 
-    kern = functools.partial(_dq_kernel, plan=plan, scale=scale)
+    kern = functools.partial(_dq_kernel, sched=sched, steps=steps,
+                             scale=scale)
     return pl.pallas_call(
         kern,
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((B, n_pad, D), q.dtype),
+        out_shape=jax.ShapeDtypeStruct((B, nQ, D), q.dtype),
         compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
@@ -197,45 +200,71 @@ def salo_plan_backward_dq(dout, delta, m, l, q, k, v, pos, *,
     )(kvt, flg, pos_q, pos_k, q, k, v, dout, m, l, delta)
 
 
-@functools.partial(jax.jit, static_argnames=("plan", "scale", "interpret"))
-def salo_plan_backward_dkv(dout, delta, m, l, q, k, v, pos, *,
-                           plan: ExecutionPlan, scale: float,
-                           interpret: bool = False):
-    """dK and dV in ONE launch over the transposed plan. Returns
-    ``(dk, dv)``, both (B, n_pad, D) working-space padded."""
+def salo_plan_backward_dq(dout, delta, m, l, q, k, v, pos, *,
+                          plan: ExecutionPlan, scale: float,
+                          interpret: bool = False) -> jax.Array:
+    """dQ in ONE launch over the forward plan. All arrays working-space
+    padded: q/k/v/dout (B, n_pad, D); delta/m/l (B, n_pad); pos (n_pad,).
+    """
     B, n_pad, D = q.shape
     assert n_pad == plan.n_pad, (n_pad, plan.n_pad)
-    bq, bk = plan.block_q, plan.block_k
-    nq, nkb = plan.nq, plan.nkb
-    tp = plan.transposed()
-    steps = tp.max_steps
+    return salo_table_backward_dq(
+        dout, delta, m, l, q, k, v,
+        pos.reshape(plan.nq, plan.block_q),
+        pos.reshape(plan.nkb, plan.block_k),
+        jnp.asarray(plan.kv_blocks.reshape(-1)),
+        jnp.asarray(plan.flags.reshape(-1)),
+        sched=plan.sched, block_q=plan.block_q, block_k=plan.block_k,
+        scale=scale, interpret=interpret)
 
-    qbt = jnp.asarray(tp.q_blocks.reshape(-1))       # (nkb*steps,) int32
-    flg = jnp.asarray(tp.flags.reshape(-1))
-    pos_q = pos.reshape(nq, bq)
-    pos_k = pos.reshape(nkb, bk)
 
-    def kv_idx(b, j, s, qbt_ref, flg_ref):
-        return (b, j, 0)
+@functools.partial(jax.jit, static_argnames=("sched", "block_q", "block_k",
+                                             "nkb", "scale", "interpret"))
+def salo_table_backward_dkv(dout, delta, m, l, q, k, v, pos_q, pos_k,
+                            row_tile, qbt, flg, *, sched: BandSchedule,
+                            block_q: int, block_k: int, nkb: int,
+                            scale: float, interpret: bool = False):
+    """dK and dV in ONE launch over PACKED transposed tables.
 
-    def q_idx(b, j, s, qbt_ref, flg_ref):
-        return (b, qbt_ref[j * steps + s], 0)
+    Grid row ``r`` keeps KV tile ``row_tile[r]`` resident while its slice
+    of visiting query blocks streams past; per-row partials land in a
+    (B, n_rows*block_k, D) buffer and are scatter-added per owner tile on
+    the host side (rows split from one ragged transposed row — the
+    global-column tile that every query block visits — recombine there).
+    row_tile: (R,); qbt/flg: (R*W,) int32 flattened. Returns ``(dk, dv)``,
+    both (B, nkb*block_k, D) float32.
+    """
+    B, nQ, D = q.shape
+    bq, bk = block_q, block_k
+    R = row_tile.shape[0]
+    steps = qbt.shape[0] // R
 
-    def row_idx(b, j, s, qbt_ref, flg_ref):
-        return (b, qbt_ref[j * steps + s])
+    def kv_idx(b, r, s, rt_ref, qbt_ref, flg_ref):
+        return (b, r, 0)
+
+    def q_idx(b, r, s, rt_ref, qbt_ref, flg_ref):
+        return (b, qbt_ref[r * steps + s], 0)
+
+    def row_idx(b, r, s, rt_ref, qbt_ref, flg_ref):
+        return (b, qbt_ref[r * steps + s])
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,
-        grid=(B, nkb, steps),
+        num_scalar_prefetch=3,
+        grid=(B, R, steps),
         in_specs=[
             pl.BlockSpec((1, bk),
-                         lambda b, j, s, qbt_ref, flg_ref: (j, 0)),  # pos_k
+                         lambda b, r, s, rt_ref, qbt_ref, flg_ref:
+                         (rt_ref[r], 0)),                            # pos_k
             pl.BlockSpec((1, bq),
-                         lambda b, j, s, qbt_ref, flg_ref:
-                         (qbt_ref[j * steps + s], 0)),               # pos_q
+                         lambda b, r, s, rt_ref, qbt_ref, flg_ref:
+                         (qbt_ref[r * steps + s], 0)),               # pos_q
             pl.BlockSpec((1, bq, D), q_idx),                         # q
-            pl.BlockSpec((1, bk, D), kv_idx),                        # k
-            pl.BlockSpec((1, bk, D), kv_idx),                        # v
+            pl.BlockSpec((1, bk, D),
+                         lambda b, r, s, rt_ref, qbt_ref, flg_ref:
+                         (b, rt_ref[r], 0)),                         # k
+            pl.BlockSpec((1, bk, D),
+                         lambda b, r, s, rt_ref, qbt_ref, flg_ref:
+                         (b, rt_ref[r], 0)),                         # v
             pl.BlockSpec((1, bq, D), q_idx),                         # dout
             pl.BlockSpec((1, bq), row_idx),                          # m
             pl.BlockSpec((1, bq), row_idx),                          # l
@@ -251,17 +280,40 @@ def salo_plan_backward_dkv(dout, delta, m, l, q, k, v, pos, *,
         ],
     )
 
-    kern = functools.partial(_dkv_kernel, plan=plan, scale=scale)
-    dk, dv = pl.pallas_call(
+    kern = functools.partial(_dkv_kernel, sched=sched, steps=steps,
+                             scale=scale)
+    dk_r, dv_r = pl.pallas_call(
         kern,
         grid_spec=grid_spec,
         out_shape=[
-            jax.ShapeDtypeStruct((B, n_pad, D), k.dtype),
-            jax.ShapeDtypeStruct((B, n_pad, D), v.dtype),
+            jax.ShapeDtypeStruct((B, R * bk, D), jnp.float32),
+            jax.ShapeDtypeStruct((B, R * bk, D), jnp.float32),
         ],
         compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
         name="salo_plan_backward_dkv",
-    )(qbt, flg, pos_k, pos_q, q, k, v, dout, m, l, delta)
-    return dk, dv
+    )(row_tile, qbt, flg, pos_k, pos_q, q, k, v, dout, m, l, delta)
+    z = jnp.zeros((B, nkb, bk, D), jnp.float32)
+    dk = z.at[:, row_tile].add(dk_r.reshape(B, R, bk, D))
+    dv = z.at[:, row_tile].add(dv_r.reshape(B, R, bk, D))
+    return dk.reshape(B, nkb * bk, D), dv.reshape(B, nkb * bk, D)
+
+
+def salo_plan_backward_dkv(dout, delta, m, l, q, k, v, pos, *,
+                           plan: ExecutionPlan, scale: float,
+                           interpret: bool = False):
+    """dK and dV in ONE launch over the packed transposed plan. Returns
+    ``(dk, dv)``, both (B, n_pad, D) working-space padded."""
+    B, n_pad, D = q.shape
+    assert n_pad == plan.n_pad, (n_pad, plan.n_pad)
+    pk = plan.transposed_packed()
+    return salo_table_backward_dkv(
+        dout, delta, m, l, q, k, v,
+        pos.reshape(plan.nq, plan.block_q),
+        pos.reshape(plan.nkb, plan.block_k),
+        jnp.asarray(pk.row_tile),
+        jnp.asarray(pk.q_blocks.reshape(-1)),
+        jnp.asarray(pk.flags.reshape(-1)),
+        sched=plan.sched, block_q=plan.block_q, block_k=plan.block_k,
+        nkb=plan.nkb, scale=scale, interpret=interpret)

@@ -48,11 +48,12 @@ def cell_rules(cfg: ModelConfig, shape: ShapeCell, mesh) -> Dict[str, Any]:
             rules["batch"] = None
     # Sequence parallelism for long-context cells (the SALO band makes the
     # halo cheap — DESIGN.md §4). Applies to activation/cache seq axes.
-    if shape.seq_len >= 32768 and rules["batch"] in (None, ("data",)):
-        free = [] if rules["batch"] == ("data",) else ["data"]
-        if "pod" in axes and rules["batch"] is None:
-            free = ["pod"] + free
-        rules["seq"] = tuple(free) if free else None
+    # Exactly ONE mesh axis: the ShardedPlan halo exchange runs over a
+    # single named axis (dist.sharding.sequence_mesh_axis), and keeping the
+    # halo off the cross-pod DCN boundary is the right call anyway — "pod"
+    # never carries seq.
+    if shape.seq_len >= 32768 and rules["batch"] is None:
+        rules["seq"] = ("data",)
     # KV heads: replicate when they don't divide the model axis.
     if cfg.n_kv_heads % tp != 0:
         rules["kv_heads"] = None
@@ -121,33 +122,14 @@ def _logical_for_batch_key(key: str):
 
 
 def batch_shardings(specs, mesh, rules):
-    out = {}
-    for k in specs:
-        logical = _logical_for_batch_key(k)
-        out[k] = _divisible(mesh, rules, logical, specs[k].shape)
-    return out
-
-
-def _axes_product(mesh, spec_entry) -> int:
-    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
-    axes = (spec_entry if isinstance(spec_entry, tuple)
-            else (spec_entry,) if spec_entry else ())
-    p = 1
-    for a in axes:
-        p *= sizes.get(a, 1)
-    return p
-
-
-def _divisible(mesh, rules, logical, shape):
-    """input_sharding, but drop any axis that doesn't divide its dim —
-    pjit *argument* shardings (unlike constraints) require divisibility."""
-    from jax.sharding import NamedSharding, PartitionSpec as P
-    with shlib.axis_rules(rules):
-        spec = shlib.resolve(*logical)
-    entries = list(spec) + [None] * (len(shape) - len(spec))
-    clean = [e if dim % max(_axes_product(mesh, e), 1) == 0 else None
-             for e, dim in zip(entries, shape)]
-    return NamedSharding(mesh, P(*clean))
+    # input_sharding applies _mesh_clean with the shape: pjit *argument*
+    # shardings (unlike constraints) require every named axis to exist on
+    # the mesh and divide its dimension (single source of truth in
+    # repro.dist.sharding — the _divisible/_axes_product copies that used
+    # to live here are gone).
+    return {k: shlib.input_sharding(mesh, rules, *_logical_for_batch_key(k),
+                                    shape=specs[k].shape)
+            for k in specs}
 
 
 def cache_shardings(cache_specs, mesh, rules, decode_seq_axis=None):
@@ -172,7 +154,7 @@ def cache_shardings(cache_specs, mesh, rules, decode_seq_axis=None):
             logical = (None, "batch", None)
         else:
             logical = (None,) * nd
-        return _divisible(mesh, r, logical, leaf.shape)
+        return shlib.input_sharding(mesh, r, *logical, shape=leaf.shape)
     return jax.tree_util.tree_map_with_path(one, cache_specs)
 
 
@@ -269,7 +251,8 @@ def build_cell(arch_cfg: ModelConfig, shape: ShapeCell, mesh,
                 logical[i] = None
         return tuple(logical)
 
-    bt_sh = {k: shlib.input_sharding(mesh, rules, *_decode_logical(k))
+    bt_sh = {k: shlib.input_sharding(mesh, rules, *_decode_logical(k),
+                                     shape=bt_specs[k].shape)
              for k in bt_specs}
     # If KV heads don't divide the TP axis, put the model axis on the cache
     # sequence instead: TP ranks each hold a slice of the context and the

@@ -146,6 +146,10 @@ def attn_apply(p, x, cfg: ModelConfig, pattern: HybridSparsePattern,
     q = constrain(q, "batch", "seq", "heads", "head_dim")
     k = constrain(k, "batch", "seq", "kv_heads", "head_dim")
     v = constrain(v, "batch", "seq", "kv_heads", "head_dim")
+    # When the cell rules map "seq" to a mesh axis (long-context SP),
+    # hybrid_attention routes to the ShardedPlan shard_map path — the same
+    # fused engines with ppermute halo exchange instead of a K/V
+    # all-gather (repro.dist.sharded_plan).
     out = hybrid_attention(
         q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
         v.transpose(0, 2, 1, 3), pattern, impl=cfg.salo.impl,

@@ -344,7 +344,14 @@ def _remat(f, cfg: ModelConfig):
 
 def segment_apply(params, x, cfg: ModelConfig, kind: str, pattern,
                   positions=None, mrope=None, enc_out=None):
-    """Scan a stacked segment. Returns (x, summed aux)."""
+    """Scan a stacked segment. Returns (x, summed aux).
+
+    Activations stay constrained to ("batch", "seq", "embed") through every
+    block, so under a long-context cell's rules (``"seq"`` mapped to a mesh
+    axis) the whole stack runs sequence-parallel: norms/MLPs shard
+    elementwise and attention takes the ShardedPlan halo-exchange path
+    inside :func:`repro.models.layers.attn_apply`.
+    """
     def body(carry, layer_params):
         y, aux = block_apply(layer_params, carry, cfg, kind, pattern,
                              positions=positions, mrope=mrope,
