@@ -1,4 +1,4 @@
-"""Roofline table from the dry-run JSONs (EXPERIMENTS.md §Roofline).
+"""Roofline table from the dry-run JSONs (repro/roofline/analysis.py).
 
   PYTHONPATH=src python -m benchmarks.roofline_report [--mesh pod1|pod2]
                                                       [--markdown]

@@ -18,7 +18,8 @@ def main() -> None:
                     help="skip the slow measured-speedup benchmarks")
     args = ap.parse_args()
 
-    from benchmarks import dist_stats, paper_claims, plan_stats, serve_stats
+    from benchmarks import (dist_stats, paper_claims, plan_stats,
+                            serve_dist_stats, serve_stats)
 
     rows = []
     paper_claims.sec63_sanger_comparison(rows)
@@ -31,6 +32,9 @@ def main() -> None:
     serve_stats.serve_benchmark(rows, measure=not args.quick)
     # Sequence parallelism: halo bytes vs all-gather + parity (BENCH_dist)
     dist_stats.dist_benchmark(rows, measure=not args.quick)
+    # Sequence-parallel serving: sharded slab + decode psum bytes + 8-shard
+    # greedy parity (BENCH_serve_dist.json)
+    serve_dist_stats.serve_dist_benchmark(rows, measure=not args.quick)
     if not args.quick:
         paper_claims.fig7_speedup(rows)
         paper_claims.sec21_quadratic_scaling(rows)
@@ -94,6 +98,16 @@ def main() -> None:
     if "dist/parity" in d and d["dist/parity"] != 1.0:
         failures.append(("dist_parity", d["dist/parity"],
                          "== 1.0 (sharded fwd+bwd == single-device fused)"))
+    # sequence-parallel serving: sharding must shrink each device's slab
+    # AND the decode combine must beat all-gathering the KV view slices,
+    # with the 8-shard engine token-exact vs the single-device engine
+    for k, v in d.items():
+        if k.startswith("serve_dist/") and k.endswith("bytes_ratio") \
+                and v >= 1.0:
+            failures.append((k, v, "< 1.0 (sharded serving bytes win)"))
+    if "serve_dist/parity" in d and d["serve_dist/parity"] != 1.0:
+        failures.append(("serve_dist_parity", d["serve_dist/parity"],
+                         "== 1.0 (8-shard greedy == single-device)"))
     if failures:
         for f in failures:
             print(f"CHECK-FAILED: {f}", file=sys.stderr)

@@ -24,7 +24,7 @@ class MoEConfig:
     load_balance_coef: float = 1e-2
     # Dispatch locality: tokens are split into this many groups (aligned
     # with the DP sharding) and each group routes/sorts independently —
-    # no global sort, no cross-shard scatter (EXPERIMENTS.md §Perf).
+    # no global sort, no cross-shard scatter (models/moe.py).
     dispatch_groups: int = 16
 
 
@@ -59,7 +59,7 @@ class SALOConfig:
     block_q: int = 256
     block_k: int = 256
     # SALO windowed decode: read only window+sinks cache slots per step
-    # (O(w) HBM traffic instead of O(n); EXPERIMENTS.md §Perf).
+    # (O(w) HBM traffic instead of O(n); core/attention.py decode path).
     decode_slice: bool = False
     # SALO ring cache: the KV cache itself has window+sinks slots — O(w)
     # memory at ANY context length (the paper's pattern as a cache layout).

@@ -105,7 +105,8 @@ def hybrid_decode_attention(q: jax.Array, k_cache: jax.Array,
                             v_cache: jax.Array, t, pattern, *,
                             scale: Optional[float] = None,
                             cache_positions=None,
-                            slice_window: bool = False) -> jax.Array:
+                            slice_window: bool = False,
+                            return_state: bool = False):
     """Single-token decode — ragged aware. q: (B, H, 1, D); caches:
     (B, Hkv, S, D); ``t``: scalar position (lockstep batch) OR a (B,)
     vector — one position per request, so a single call serves a
@@ -122,6 +123,14 @@ def hybrid_decode_attention(q: jax.Array, k_cache: jax.Array,
     sequence — O(w) instead of O(n) HBM traffic per step, the serving-side
     payoff of the paper's pattern. Requires the slot==position cache layout
     (``cache_positions is None``) and a lockstep scalar ``t``.
+
+    ``return_state=True`` returns the finalized partial triple
+    ``(out, m, l)`` with m/l (B, H, 1) instead of the softmaxed output —
+    what a sequence shard contributes to the cross-shard masked-psum merge
+    over its owned cache slots. A request with no valid slot on this shard
+    yields the ``(0, NEG_INF, 0)`` identity (renorm.PartialState contract).
+    Incompatible with ``slice_window`` (the sharded slab path passes
+    ``cache_positions``, which already disables the slice).
     """
     from repro.core import renorm
     from repro.core.scheduler import (STEP_GLOBAL, STEP_WINDOW,
@@ -149,6 +158,25 @@ def hybrid_decode_attention(q: jax.Array, k_cache: jax.Array,
         if extra_mask is not None:
             m = m & extra_mask
         return jnp.where(m[:, None, None, :], s, renorm.NEG_INF)
+
+    if return_state:
+        pos_k = (jnp.arange(S, dtype=jnp.int32) if cache_positions is None
+                 else cache_positions.astype(jnp.int32))
+        s = grouped(k_cache, v_cache, pos_k)          # (B, Hkv, rep, S)
+        m = jnp.max(s, axis=-1)
+        # masked entries sit at NEG_INF: exp(NEG_INF - shift) underflows to
+        # exactly 0, and an all-masked row keeps (0, NEG_INF, 0).
+        shift = jnp.where(m <= renorm.NEG_INF / 2, 0.0, m)
+        p = jnp.exp(s - shift[..., None])
+        l = jnp.sum(p, axis=-1)
+        # f32 contraction AND an f32 partial: the cross-shard merge
+        # re-weights partials, so the round to the compute dtype must
+        # happen ONCE, after the merge — per-shard bf16 rounding here
+        # would diverge from the single-device round-once numerics
+        acc = jnp.einsum("bgrs,bgsd->bgrd", p, v_cache.astype(p.dtype))
+        out = acc / jnp.where(l == 0.0, 1.0, l)[..., None]
+        return (out.reshape(B, H, 1, D),
+                m.reshape(B, H, 1), l.reshape(B, H, 1))
 
     if slice_window and cache_positions is None and a > -(1 << 29) \
             and not ragged_t:
@@ -187,14 +215,16 @@ def hybrid_chunk_attention(q: jax.Array, k_view: jax.Array,
                            v_view: jax.Array, pos_q: jax.Array,
                            pos_k: jax.Array, kv_blocks: jax.Array,
                            flags: jax.Array, pattern, *,
-                           scale: Optional[float] = None) -> jax.Array:
+                           scale: Optional[float] = None,
+                           return_state: bool = False):
     """Chunked-prefill attention (model-facing layout): one fused pass of a
     prompt chunk against the request's paged KV view + the chunk itself.
 
     q: (B, H, Cp, D); k_view/v_view: (B, Hkv, Vp, D); pos_q: (B, Cp);
     pos_k: (B, Vp) original positions; kv_blocks/flags: (nq, W) ChunkPlan
     step tables. GQA via no-copy broadcast (same rule as the training
-    path). Returns (B, H, Cp, D).
+    path). Returns (B, H, Cp, D), plus (m, l) of shape (B, H, Cp) when
+    ``return_state`` (the per-shard partial for the cross-shard merge).
     """
     from repro.core.blockwise import chunk_attention
 
@@ -211,6 +241,10 @@ def hybrid_chunk_attention(q: jax.Array, k_view: jax.Array,
     vf = v_view.reshape(B * H, Vp, D)
     pos_qf = jnp.broadcast_to(pos_q[:, None], (B, H, Cp)).reshape(B * H, Cp)
     pos_kf = jnp.broadcast_to(pos_k[:, None], (B, H, Vp)).reshape(B * H, Vp)
-    out = chunk_attention(qf, kf, vf, pos_qf, pos_kf, kv_blocks, flags,
-                          pattern, scale=scale)
-    return out.reshape(B, H, Cp, D)
+    res = chunk_attention(qf, kf, vf, pos_qf, pos_kf, kv_blocks, flags,
+                          pattern, scale=scale, return_state=return_state)
+    if return_state:
+        out, m, l = res
+        return (out.reshape(B, H, Cp, D), m.reshape(B, H, Cp),
+                l.reshape(B, H, Cp))
+    return res.reshape(B, H, Cp, D)

@@ -103,7 +103,8 @@ def _plan_partial(state: renorm.PartialState, q_blk, k_pad, v_pad, pos_pad,
     # the affine shift ``i + c0 + s`` — a CONSTANT shift per step — so the
     # banded walk is a sliced view of the padded KV stream, not a gather.
     # No per-block index materialization; XLA fuses the slice into the
-    # matmul operand (EXPERIMENTS.md §Perf gemma/prefill_32k). Out-of-range
+    # matmul operand (measured on the gemma/prefill_32k dry-run cell;
+    # see benchmarks/roofline_report.py). Out-of-range
     # tiles carry PAD_SENTINEL positions and mask to nothing.
     sched = plan.sched
     if len(sched.bands) == 1 and sched.n_global == 0 and Bq == bk:
@@ -528,7 +529,8 @@ def chunk_attention(q: jax.Array, k_view: jax.Array, v_view: jax.Array,
                     pos_q: jax.Array, pos_k: jax.Array,
                     kv_blocks: jax.Array, flags: jax.Array,
                     pattern: HybridSparsePattern, *,
-                    scale: Optional[float] = None) -> jax.Array:
+                    scale: Optional[float] = None,
+                    return_state: bool = False):
     """Plan-driven chunked-prefill attention: ONE table-driven pass.
 
     q: (B, Cp, D) chunk queries; k_view/v_view: (B, Vp, D) the request's
@@ -538,6 +540,11 @@ def chunk_attention(q: jax.Array, k_view: jax.Array, v_view: jax.Array,
     same compiled step serves every chunk of a request). One ``lax.scan``
     over W table columns folds the whole causal hybrid pattern through the
     renormalized online softmax — the serving twin of ``_plan_partial``.
+
+    ``return_state=True`` additionally returns the finalized partial triple
+    ``(out, m, l)`` with m/l (B, Cp) — what a sequence shard feeds the
+    cross-shard masked-psum merge (a chunk row whose every step is masked
+    on this shard carries the ``(0, NEG_INF, 0)`` identity).
     """
     B, Cp, D = q.shape
     nq, W = kv_blocks.shape
@@ -567,4 +574,9 @@ def chunk_attention(q: jax.Array, k_view: jax.Array, v_view: jax.Array,
 
     state = renorm.empty_state((B, nq, block), D)
     state, _ = jax.lax.scan(body, state, jnp.arange(W, dtype=jnp.int32))
+    if return_state:
+        # f32 partial: the cross-shard merge rounds to the compute dtype
+        # once, AFTER combining (single-device round-once numerics)
+        return (renorm.finalize(state).reshape(B, Cp, D),
+                state.m.reshape(B, Cp), state.l.reshape(B, Cp))
     return renorm.finalize(state, q.dtype).reshape(B, Cp, D)

@@ -595,6 +595,54 @@ class ChunkPlan:
         fl[: self.nq, : self.max_steps] = self.flags
         return kv, fl
 
+    def sharded_tables(self, n_shards: int, nq: int, width: int,
+                       chunk_owner: Optional[int] = None):
+        """Per-shard step tables over the ``[sink | ring | chunk]`` view —
+        the serving mirror of :func:`repro.dist.sharded_plan.shard_plan`.
+
+        Context tiles are striped contiguously over the shards (tile ``t``
+        owned by ``t // tiles_per_shard``, matching the paged layout's
+        page striping), so each shard executes only the steps whose KV it
+        holds, remapped onto its local view ``[owned ctx tiles | chunk]``.
+        The chunk's self-attention tiles are assigned to exactly ONE shard
+        (``chunk_owner``, default the last — the chunk KV is replicated, so
+        any owner is exact); every (query, kv-slot) pair is therefore
+        evaluated on exactly one shard and the per-shard ``(out, m, l)``
+        partials combine exactly under the masked-psum merge
+        (:func:`repro.dist.sharded_plan.masked_psum_merge` — the
+        cross-device instance of ``renorm.merge``). Shards with no step for
+        a row keep ``flags == 0`` padding no-ops, which produce the empty
+        PartialState identity ``(0, NEG_INF, 0)``.
+
+        Returns ``(kv, fl)`` stacked ``(n_shards, nq, width)``.
+        """
+        ctx_tiles = (self.n_sink + self.ring_cap) // self.block
+        if ctx_tiles % n_shards:
+            raise ValueError(f"ctx tiles {ctx_tiles} not divisible by "
+                             f"{n_shards} shards (use a shard-aligned "
+                             f"PagedLayout)")
+        tps = ctx_tiles // n_shards
+        if chunk_owner is None:
+            chunk_owner = n_shards - 1
+        assert nq >= self.nq and width >= tps + (self.chunk_pad
+                                                 // self.block)
+        kv = np.zeros((n_shards, nq, width), dtype=np.int32)
+        fl = np.zeros((n_shards, nq, width), dtype=np.int32)
+        fill = np.zeros((n_shards, nq), dtype=np.int64)
+        for i in range(self.nq):
+            for st in range(int(self.num_steps[i])):
+                t = int(self.kv_blocks[i, st])
+                f = int(self.flags[i, st])
+                if t < ctx_tiles:
+                    s, local = t // tps, t % tps
+                else:
+                    s, local = chunk_owner, tps + (t - ctx_tiles)
+                w = fill[s, i]
+                kv[s, i, w] = local
+                fl[s, i, w] = f
+                fill[s, i] = w + 1
+        return kv, fl
+
     def stats(self) -> dict:
         """Tile accounting: what the fused chunk pass executes vs the
         token-by-token decode replay it replaces."""

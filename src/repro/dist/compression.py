@@ -51,9 +51,20 @@ def compress_decompress(grads, ef_state=None):
     return out, ef
 
 
-def compressed_psum(x: jax.Array, axis: str) -> jax.Array:
+def compressed_psum(x: jax.Array, axis) -> jax.Array:
     """psum of int8-quantized operands (the wire format of the cross-pod
     all-reduce). Each participant quantizes locally; the sum happens on the
-    dequantized values (bandwidth model: int8 + one f32 scale per tensor)."""
+    dequantized values (bandwidth model: int8 + one f32 scale per tensor).
+    ``axis``: a mesh axis name or tuple of names (pod x data)."""
     q, s = _q8(x)
     return jax.lax.psum(_dq(q, s), axis)
+
+
+def compressed_psum_with_residual(x: jax.Array, axis):
+    """:func:`compressed_psum` that also returns this participant's
+    quantization residual ``x - dq(q8(x))`` — what the train step's error
+    feedback carries into the next step so the accumulated update stays
+    unbiased (the wire itself moved only int8 + one scale)."""
+    q, s = _q8(x)
+    dq = _dq(q, s)
+    return jax.lax.psum(dq, axis), x - dq

@@ -274,6 +274,38 @@ def shard_plan(plan: ExecutionPlan, n_shards: int) -> ShardedPlan:
 
 
 # ---------------------------------------------------------------------- #
+# Cross-shard softmax merge for the sharded SERVING engines
+# ---------------------------------------------------------------------- #
+def masked_psum_merge(out: jax.Array, m: jax.Array, l: jax.Array,
+                      axis: str) -> jax.Array:
+    """Combine per-shard finalized attention partials across a mesh axis.
+
+    The serving-side counterpart of the training path's halo exchange: the
+    sharded paged slab gives each shard of the "seq" axis a disjoint slice
+    of every request's cache, so decode / chunked prefill run ONE launch
+    per shard over the owned slots and the partials are merged here — the
+    cross-device instance of :func:`repro.core.renorm.merge`, applied to
+    finalized triples. ``out``: (..., d) = acc / l (guarded); ``m``/``l``:
+    (...) row stats. Each shard's contribution is weighted by
+    ``c = l * exp(m - M)`` with ``M = pmax(m)``; the
+    ``renorm.PartialState`` empty-row identity ``(0, NEG_INF, 0)`` gives
+    ``c == 0``, which is what makes the psum *masked*: shards holding no
+    valid slot for a row (inactive request, slot owned elsewhere, ring not
+    yet reaching this shard) contribute exactly nothing, with no explicit
+    mask traffic.
+    """
+    from repro.core.renorm import NEG_INF
+
+    M = jax.lax.pmax(m, axis)
+    shift = jnp.where(M <= NEG_INF / 2, 0.0, M)
+    c = l * jnp.exp(m - shift)       # m <= M; empty rows: l == 0 -> c == 0
+    num = jax.lax.psum(out.astype(jnp.float32) * c[..., None], axis)
+    den = jax.lax.psum(c, axis)
+    return (num / jnp.where(den == 0.0, 1.0, den)[..., None]).astype(
+        out.dtype)
+
+
+# ---------------------------------------------------------------------- #
 # The halo/broadcast exchange and its exact adjoint
 # ---------------------------------------------------------------------- #
 def _build_views(sp: ShardedPlan, axis: str, idx, k_l, v_l):

@@ -52,10 +52,14 @@ def _use_fallback(interpret: bool) -> bool:
 
 
 def _tile_update(s, steps, t, q, k, v, pos_k, out_ref, acc_ref, m_scr, l_scr,
-                 *, pattern: HybridSparsePattern, scale: float):
+                 *, pattern: HybridSparsePattern, scale: float,
+                 m_ref=None, l_ref=None):
     """Fold one cache tile into the online-softmax scratch; finalize on the
     last sequential step. q: (rep, hd); k/v: (Bs, hd); pos_k: (Bs,) int32;
-    t: per-request scalar position."""
+    t: per-request scalar position. ``m_ref``/``l_ref`` (optional
+    (1, 1, rep, LANES) out refs) additionally emit the row stats — the
+    per-shard partial the sequence-parallel decode merge consumes; rows
+    that attended nothing finalize to the (0, NEG_INF, 0) identity."""
 
     @pl.when(s == 0)
     def _init():
@@ -96,6 +100,9 @@ def _tile_update(s, steps, t, q, k, v, pos_k, out_ref, acc_ref, m_scr, l_scr,
         l = l_scr[...][:, :1]
         out_ref[0, 0] = (acc_ref[...] /
                          jnp.where(l == 0.0, 1.0, l)).astype(out_ref.dtype)
+        if m_ref is not None:
+            m_ref[0, 0] = m_scr[...]
+            l_ref[0, 0] = l_scr[...]
 
 
 def _ragged_kernel(t_ref, q_ref, k_ref, v_ref, pos_ref, out_ref,
@@ -116,6 +123,18 @@ def _paged_kernel(t_ref, pt_ref, q_ref, k_ref, v_ref, pos_ref, out_ref,
     _tile_update(s, steps, t_ref[b], q_ref[0, 0], k_ref[0, :, 0],
                  v_ref[0, :, 0], pos_ref[0, 0], out_ref, acc_ref, m_scr,
                  l_scr, pattern=pattern, scale=scale)
+
+
+def _paged_state_kernel(t_ref, pt_ref, q_ref, k_ref, v_ref, pos_ref,
+                        out_ref, m_ref, l_ref, acc_ref, m_scr, l_scr, *,
+                        pattern: HybridSparsePattern, steps: int,
+                        scale: float):
+    b = pl.program_id(0)
+    s = pl.program_id(2)
+    _tile_update(s, steps, t_ref[b], q_ref[0, 0], k_ref[0, :, 0],
+                 v_ref[0, :, 0], pos_ref[0, 0], out_ref, acc_ref, m_scr,
+                 l_scr, pattern=pattern, scale=scale, m_ref=m_ref,
+                 l_ref=l_ref)
 
 
 @functools.partial(jax.jit, static_argnames=("pattern", "block_s", "scale",
@@ -183,13 +202,14 @@ def salo_decode(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
 
 
 @functools.partial(jax.jit, static_argnames=("pattern", "block_s", "scale",
-                                             "interpret"))
+                                             "interpret", "return_state"))
 def salo_paged_decode(q: jax.Array, k_slab: jax.Array, v_slab: jax.Array,
                       page_tables: jax.Array, positions: jax.Array, t, *,
                       pattern: HybridSparsePattern,
                       block_s: Optional[int] = None,
                       scale: Optional[float] = None,
-                      interpret: bool = False) -> jax.Array:
+                      interpret: bool = False,
+                      return_state: bool = False):
     """Ragged decode straight off the pooled paged slab.
 
     q: (B, H, 1, hd); slabs: (n_pages, page, Hkv, hd) shared by ALL
@@ -198,7 +218,14 @@ def salo_paged_decode(q: jax.Array, k_slab: jax.Array, v_slab: jax.Array,
     (S_req = pages_per_req * page); ``t``: (B,) per-request position. The
     page table is scalar-prefetched, so the BlockSpec index map resolves
     logical tile -> physical page before each DMA — the kernel never sees a
-    gathered copy of the cache. Returns (B, H, 1, hd)."""
+    gathered copy of the cache. Returns (B, H, 1, hd).
+
+    Under sequence-parallel serving each shard runs this launch over its
+    OWN page tables / slot positions (its slice of the paged slab) and
+    ``return_state=True`` makes the kernel also emit the online-softmax row
+    stats ``(m, l)`` as (B, H, 1) — the per-shard partial the masked-psum
+    merge combines across the "seq" axis. Requests with no owned live slot
+    finalize to the (0, NEG_INF, 0) merge identity."""
     B, H, _, hd = q.shape
     n_pages, page, Hkv, _ = k_slab.shape
     npp = page_tables.shape[1]
@@ -213,7 +240,8 @@ def salo_paged_decode(q: jax.Array, k_slab: jax.Array, v_slab: jax.Array,
         k_req, v_req = gather_view(k_slab, v_slab, page_tables)
         return hybrid_decode_attention(
             q, k_req.transpose(0, 2, 1, 3), v_req.transpose(0, 2, 1, 3),
-            t_arr, pattern, scale=scale_, cache_positions=positions)
+            t_arr, pattern, scale=scale_, cache_positions=positions,
+            return_state=return_state)
     bs = page if block_s is None else block_s
     assert page % bs == 0, f"block_s {bs} must divide page {page}"
     tpp = page // bs                       # tiles per page
@@ -225,8 +253,24 @@ def salo_paged_decode(q: jax.Array, k_slab: jax.Array, v_slab: jax.Array,
     def kv_idx(b, h, s, t_ref, pt_ref):
         return (pt_ref[b * npp + s // tpp], s % tpp, h, 0)
 
-    kern = functools.partial(_paged_kernel, pattern=pattern, steps=steps,
-                             scale=scale_)
+    kern = functools.partial(
+        _paged_state_kernel if return_state else _paged_kernel,
+        pattern=pattern, steps=steps, scale=scale_)
+    out_specs = pl.BlockSpec((1, 1, rep, hd),
+                             lambda b, h, s, t, pt: (b, h, 0, 0))
+    # state mode emits the out partial in f32: the cross-shard merge
+    # rounds to q.dtype once, after combining (per-shard rounding would
+    # diverge from the single-device round-once numerics)
+    out_shape = jax.ShapeDtypeStruct(
+        (B, Hkv, rep, hd), jnp.float32 if return_state else q.dtype)
+    if return_state:
+        # m/l ride full LANES-wide blocks (every lane equal) so the output
+        # keeps the TPU-native tiling; callers read lane 0.
+        stat_spec = pl.BlockSpec((1, 1, rep, LANES),
+                                 lambda b, h, s, t, pt: (b, h, 0, 0))
+        stat_shape = jax.ShapeDtypeStruct((B, Hkv, rep, LANES), jnp.float32)
+        out_specs = (out_specs, stat_spec, stat_spec)
+        out_shape = (out_shape, stat_shape, stat_shape)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,                     # t vector, page tables
         grid=(B, Hkv, steps),
@@ -237,21 +281,24 @@ def salo_paged_decode(q: jax.Array, k_slab: jax.Array, v_slab: jax.Array,
             pl.BlockSpec((1, bs, 1, hd), kv_idx),              # v slab
             pl.BlockSpec((1, 1, bs), lambda b, h, s, t, pt: (b, s, 0)),
         ],
-        out_specs=pl.BlockSpec((1, 1, rep, hd),
-                               lambda b, h, s, t, pt: (b, h, 0, 0)),
+        out_specs=out_specs,
         scratch_shapes=[
             pltpu.VMEM((rep, hd), jnp.float32),
             pltpu.VMEM((rep, LANES), jnp.float32),
             pltpu.VMEM((rep, LANES), jnp.float32),
         ],
     )
-    out = pl.pallas_call(
+    res = pl.pallas_call(
         kern,
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((B, Hkv, rep, hd), q.dtype),
+        out_shape=out_shape,
         compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
         name="salo_paged_decode",
     )(t_arr, pt_flat, qg, k_slab, v_slab, pos3d)
-    return out.reshape(B, H, 1, hd)
+    if return_state:
+        out, m, l = res
+        return (out.reshape(B, H, 1, hd), m[..., 0].reshape(B, H, 1),
+                l[..., 0].reshape(B, H, 1))
+    return res.reshape(B, H, 1, hd)

@@ -27,7 +27,8 @@ def make_host_mesh(data: int = 1, model: int = 1):
                      axis_types=_axis_type_auto(2))
 
 
-# TPU v5e hardware constants (roofline denominators; see EXPERIMENTS.md).
+# TPU v5e hardware constants (roofline denominators; consumed by
+# repro/roofline/analysis.py and benchmarks/roofline_report.py).
 PEAK_FLOPS_BF16 = 197e12     # per chip
 HBM_BW = 819e9               # bytes/s per chip
 ICI_BW = 50e9                # bytes/s per link

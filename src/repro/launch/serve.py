@@ -9,6 +9,11 @@
 ``--engine continuous`` submits a RAGGED batch (prompt lengths spread
 around ``--prompt-len``) to the paged-slab engine and reports launch
 counters alongside throughput.
+
+``--seq-shards N`` shards the continuous engine over an N-way "seq" mesh
+axis (sequence-parallel serving: per-shard slab pools, sharded decode slot
+map, masked-psum partial combine). Needs >= N devices — on a CPU host set
+``XLA_FLAGS=--xla_force_host_platform_device_count=N`` before launching.
 """
 from __future__ import annotations
 
@@ -46,6 +51,9 @@ def main(argv=None):
     ap.add_argument("--page", type=int, default=8)
     ap.add_argument("--max-batch", type=int, default=0,
                     help="engine rows (0 = --batch)")
+    ap.add_argument("--seq-shards", type=int, default=1,
+                    help="sequence-parallel serving shards (continuous "
+                         "engine; needs a 'seq' mesh of that many devices)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -61,10 +69,21 @@ def main(argv=None):
         max_batch = args.max_batch or args.batch
         from repro.models.layers import salo_pattern
         from repro.serve.paged_cache import layout_for_pattern
-        lay = layout_for_pattern(salo_pattern(cfg, causal=True), args.page)
+        mesh = None
+        if args.seq_shards > 1:
+            if len(jax.devices()) < args.seq_shards:
+                ap.error(f"--seq-shards {args.seq_shards} needs that many "
+                         f"devices (have {len(jax.devices())}; on CPU set "
+                         f"XLA_FLAGS=--xla_force_host_platform_device_"
+                         f"count={args.seq_shards})")
+            from repro.compat import make_mesh
+            mesh = make_mesh((args.seq_shards,), ("seq",))
+        lay = layout_for_pattern(salo_pattern(cfg, causal=True), args.page,
+                                 shards=args.seq_shards)
         eng = ContinuousEngine(model, ContinuousConfig(
-            n_pages=1 + max_batch * lay.pages_per_req, page=args.page,
-            chunk=args.chunk, max_batch=max_batch))
+            n_pages=1 + max_batch * lay.pages_per_shard, page=args.page,
+            chunk=args.chunk, max_batch=max_batch,
+            seq_shards=args.seq_shards), mesh=mesh)
         lens = _ragged_lengths(args.prompt_len, args.batch, rng)
         rids = [eng.submit(rng.integers(0, cfg.vocab_size, (L,)),
                            args.new_tokens) for L in lens]
@@ -74,7 +93,7 @@ def main(argv=None):
         total_new = args.batch * args.new_tokens
         print(f"# arch={cfg.name} engine=continuous batch={args.batch} "
               f"prompts={lens} new={args.new_tokens} chunk={args.chunk} "
-              f"page={args.page}")
+              f"page={args.page} seq_shards={args.seq_shards}")
         print(f"# {dt:.2f}s total, {total_new/dt:.1f} tok/s "
               f"(includes compile); counters={eng.counters}")
         for rid in rids[:2]:

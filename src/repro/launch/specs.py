@@ -165,7 +165,7 @@ def build_cell(arch_cfg: ModelConfig, shape: ShapeCell, mesh,
 
     ``fn`` is what gets lowered; everything is abstract (no allocation).
     """
-    # A/B experiment knobs (EXPERIMENTS.md §Perf) — env so a dry-run cell
+    # A/B experiment knobs — env so a dry-run cell
     # can be re-lowered with one factor changed and nothing else.
     salo_over = {}
     if os.environ.get("REPRO_DECODE_SLICE"):
@@ -221,7 +221,10 @@ def build_cell(arch_cfg: ModelConfig, shape: ShapeCell, mesh,
 
         def fn(params, opt_state, batch):
             with shlib.axis_rules(rules):
-                return step(params, opt_state, batch)
+                # cells run compress_grads=False, so the threaded ef_state
+                # is None; the cell contract stays a 3-tuple
+                p, o, m, _ef = step(params, opt_state, batch)
+                return p, o, m
 
         args = (params_specs, opt_specs, bspecs)
         in_sh = (params_sh, opt_sh, bsh)

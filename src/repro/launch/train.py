@@ -39,6 +39,9 @@ def main(argv=None):
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--lr", type=float, default=3e-3)
     ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--compress-grads", action="store_true",
+                    help="int8 error-feedback gradient all-reduce over the "
+                         "data/pod mesh axes")
     ap.add_argument("--data", type=int, default=1)
     ap.add_argument("--model", type=int, default=1)
     ap.add_argument("--ckpt", default=None)
@@ -59,7 +62,8 @@ def main(argv=None):
         optimizer=adamw.AdamWConfig(lr=args.lr),
         schedule=Schedule(warmup_steps=max(10, args.steps // 20),
                           total_steps=args.steps),
-        microbatches=args.microbatches)
+        microbatches=args.microbatches,
+        compress_grads=args.compress_grads)
 
     params = model.init(jax.random.PRNGKey(args.seed))
     opt = adamw.init(tcfg.optimizer, params)
@@ -79,11 +83,15 @@ def main(argv=None):
 
     raw_step = make_train_step(model, tcfg)
 
-    def fn(p, o, b):
+    def fn(p, o, b, ef):
         with shlib.axis_rules(rules, mesh):
-            return raw_step(p, o, b)
+            return raw_step(p, o, b, ef)
 
-    step = jax.jit(fn, donate_argnums=(0, 1))
+    # donate ef too: under --compress-grads it is a params-sized f32 tree
+    # per participant, replaced wholesale every step (None when off —
+    # donating an empty pytree is a no-op)
+    step = jax.jit(fn, donate_argnums=(0, 1, 3))
+    ef = None   # error-feedback residual, threaded through every step
     ds = SyntheticLM(cfg, DataConfig(args.seq, args.batch, seed=args.seed,
                                      branch=args.data_branch,
                                      n_docs=args.data_docs))
@@ -93,7 +101,7 @@ def main(argv=None):
         for i in range(start, args.steps):
             t0 = time.perf_counter()
             batch = {k: jnp.asarray(v) for k, v in ds.batch(i).items()}
-            params, opt, metrics = step(params, opt, batch)
+            params, opt, metrics, ef = step(params, opt, batch, ef)
             loss = float(metrics["loss"])
             dt = time.perf_counter() - t0
             straggler = wd.observe(dt)

@@ -174,7 +174,7 @@ def attn_decode(p, x_t, cache_k, cache_v, t, cfg: ModelConfig,
         positions = jnp.full(shape, t, jnp.int32)
     q, k, v = attn_qkv(p, x_t, cfg, positions, mrope)
     if cfg.salo.ring_cache and cache_positions is None:
-        # SALO ring cache (EXPERIMENTS.md §Perf): slots = [sinks | ring of
+        # SALO ring cache: slots = [sinks | ring of
         # size w]; slot j >= g holds the most recent position p <= t with
         # (p - g) mod w == j - g.
         w_, g_ = cfg.salo.window, max(cfg.salo.n_global, 0)
@@ -206,7 +206,7 @@ def attn_decode(p, x_t, cache_k, cache_v, t, cfg: ModelConfig,
 # ------------------- continuous-batching serve paths -------------------- #
 def attn_chunk_prefill(p, x_chunk, ctx_k, ctx_v, ctx_pos, pos_q, kv_blocks,
                        flags, cfg: ModelConfig,
-                       pattern: HybridSparsePattern):
+                       pattern: HybridSparsePattern, axis=None):
     """One prompt chunk through a layer's attention (plan-driven prefill).
 
     x_chunk: (1, Cp, d) chunk activations; ctx_k/ctx_v: (1, S_req, Hkv, hd)
@@ -214,31 +214,52 @@ def attn_chunk_prefill(p, x_chunk, ctx_k, ctx_v, ctx_pos, pos_q, kv_blocks,
     slot positions; pos_q: (1, Cp) chunk positions (PAD_SENTINEL on padded
     rows); kv_blocks/flags: (nq, W) ChunkPlan step tables. Returns
     (out, k_chunk, v_chunk) — the fresh chunk KV for the caller's slab
-    write-back (the paper's window stream, cached as it flows by)."""
+    write-back (the paper's window stream, cached as it flows by).
+
+    ``axis``: sequence-parallel serving — this shard's ctx view/positions
+    and per-shard tables cover only the slots it owns (plus the replicated
+    chunk on the chunk-owner shard); the partial (out, m, l) is merged
+    across the mesh axis before the output projection."""
     B, Cp, _ = x_chunk.shape
     rope_pos = jnp.where(pos_q < PAD_SENTINEL, pos_q, 0)
     q, k, v = attn_qkv(p, x_chunk, cfg, rope_pos)
     k_view = jnp.concatenate([ctx_k.astype(k.dtype), k], axis=1)
     v_view = jnp.concatenate([ctx_v.astype(v.dtype), v], axis=1)
     pos_k = jnp.concatenate([ctx_pos, pos_q], axis=1)
-    out = hybrid_chunk_attention(
-        q.transpose(0, 2, 1, 3), k_view.transpose(0, 2, 1, 3),
-        v_view.transpose(0, 2, 1, 3), pos_q, pos_k, kv_blocks, flags,
-        pattern)
+    if axis is None:
+        out = hybrid_chunk_attention(
+            q.transpose(0, 2, 1, 3), k_view.transpose(0, 2, 1, 3),
+            v_view.transpose(0, 2, 1, 3), pos_q, pos_k, kv_blocks, flags,
+            pattern)
+    else:
+        from repro.dist.sharded_plan import masked_psum_merge
+        out, m, l = hybrid_chunk_attention(
+            q.transpose(0, 2, 1, 3), k_view.transpose(0, 2, 1, 3),
+            v_view.transpose(0, 2, 1, 3), pos_q, pos_k, kv_blocks, flags,
+            pattern, return_state=True)
+        # partials are f32; ONE round to the compute dtype, post-merge
+        out = masked_psum_merge(out, m, l, axis).astype(x_chunk.dtype)
     out = out.transpose(0, 2, 1, 3).reshape(B, Cp, cfg.n_heads * cfg.hd)
     return out @ p["wo"].astype(x_chunk.dtype), k, v
 
 
 def attn_decode_paged(p, x_t, k_slab, v_slab, page_tables, slot_pos, t_vec,
                       phys_w, off_w, cfg: ModelConfig,
-                      pattern: HybridSparsePattern, impl: str = "xla"):
+                      pattern: HybridSparsePattern, impl: str = "xla",
+                      axis=None):
     """Ragged one-token decode against ONE layer's pooled paged slab.
 
     x_t: (R, 1, d) — one token per engine row; k_slab/v_slab:
     (n_pages, page, Hkv, hd); page_tables: (R, npp); slot_pos: (R, S_req)
     live positions (already updated for this step's writes); t_vec: (R,)
     per-request positions; phys_w/off_w: (R,) slab write targets (null page
-    for inactive rows). Returns (out, k_slab, v_slab)."""
+    for inactive rows). Returns (out, k_slab, v_slab).
+
+    ``axis``: sequence-parallel serving — slab/page_tables/slot_pos are
+    this shard's slice (npp = pages_per_shard; non-owned writes already
+    routed to the null page via phys_w), so the decode launch covers only
+    the owned slots and the (out, m, l) partial is merged across the mesh
+    axis (one ragged launch per shard, masked-psum combine)."""
     from repro.serve.paged_cache import gather_view, slab_write
 
     R = x_t.shape[0]
@@ -246,16 +267,25 @@ def attn_decode_paged(p, x_t, k_slab, v_slab, page_tables, slot_pos, t_vec,
     k_slab, v_slab = slab_write(k_slab, v_slab, phys_w, off_w,
                                 k[:, 0], v[:, 0])
     qt = q.transpose(0, 2, 1, 3)                       # (R, H, 1, hd)
+    state = axis is not None
     if impl in ("pallas", "pallas_interpret"):
         from repro.kernels.salo_decode import salo_paged_decode
-        out = salo_paged_decode(qt, k_slab, v_slab, page_tables, slot_pos,
+        res = salo_paged_decode(qt, k_slab, v_slab, page_tables, slot_pos,
                                 t_vec, pattern=pattern,
-                                interpret=(impl == "pallas_interpret"))
+                                interpret=(impl == "pallas_interpret"),
+                                return_state=state)
     else:
         k_req, v_req = gather_view(k_slab, v_slab, page_tables)
-        out = hybrid_decode_attention(
+        res = hybrid_decode_attention(
             qt, k_req.transpose(0, 2, 1, 3), v_req.transpose(0, 2, 1, 3),
-            t_vec, pattern, cache_positions=slot_pos)
+            t_vec, pattern, cache_positions=slot_pos, return_state=state)
+    if state:
+        from repro.dist.sharded_plan import masked_psum_merge
+        out, m, l = res
+        # partials are f32; ONE round to the compute dtype, post-merge
+        out = masked_psum_merge(out, m, l, axis).astype(x_t.dtype)
+    else:
+        out = res
     out = out.transpose(0, 2, 1, 3).reshape(R, 1, cfg.n_heads * cfg.hd)
     return out @ p["wo"].astype(x_t.dtype), k_slab, v_slab
 

@@ -91,7 +91,7 @@ def _combine_group(out_buf, meta, T_g, k, dtype):
 def moe_apply(p, x, cfg: ModelConfig):
     """x: (B, S, d) -> (y, aux_losses dict).
 
-    Group-local dispatch (EXPERIMENTS.md §Perf kimi-k2): tokens are split
+    Group-local dispatch: tokens are split
     into ``dispatch_groups`` groups aligned with the DP sharding; routing,
     sort and capacity are PER GROUP (vmapped — no global argsort, no
     cross-shard scatter). The only cross-device movement left is the

@@ -234,27 +234,29 @@ def _ffn_residual(p, x, cfg: ModelConfig, kind: str):
 
 
 def block_chunk_prefill(p, x, ctx_k, ctx_v, ctx_pos, pos_q, kv_blocks,
-                        flags, cfg: ModelConfig, kind: str, pattern):
+                        flags, cfg: ModelConfig, kind: str, pattern,
+                        axis=None):
     """One prompt chunk through one block. Returns (x, k_chunk, v_chunk)."""
     h, k_c, v_c = L.attn_chunk_prefill(
         p["attn"], L.rmsnorm(p["ln1"], x, cfg.norm_eps), ctx_k, ctx_v,
-        ctx_pos, pos_q, kv_blocks, flags, cfg, pattern)
+        ctx_pos, pos_q, kv_blocks, flags, cfg, pattern, axis=axis)
     return _ffn_residual(p, x + h, cfg, kind), k_c, v_c
 
 
 def block_decode_paged(p, x_t, k_slab, v_slab, page_tables, slot_pos, t_vec,
                        phys_w, off_w, cfg: ModelConfig, kind: str, pattern,
-                       impl: str):
+                       impl: str, axis=None):
     """Ragged one-token decode through one block against the paged slab."""
     h, k_slab, v_slab = L.attn_decode_paged(
         p["attn"], L.rmsnorm(p["ln1"], x_t, cfg.norm_eps), k_slab, v_slab,
-        page_tables, slot_pos, t_vec, phys_w, off_w, cfg, pattern, impl)
+        page_tables, slot_pos, t_vec, phys_w, off_w, cfg, pattern, impl,
+        axis=axis)
     return _ffn_residual(p, x_t + h, cfg, kind), k_slab, v_slab
 
 
 def segment_chunk_prefill(params, slab, x, page_table, ctx_pos, pos_q,
                           kv_blocks, flags, phys_w, off_w, cfg: ModelConfig,
-                          kind: str, pattern):
+                          kind: str, pattern, axis=None):
     """Scan one stacked segment over a prompt chunk, writing the slab.
 
     ``slab``: :class:`repro.serve.paged_cache.PagedSlab` with leading layer
@@ -262,6 +264,12 @@ def segment_chunk_prefill(params, slab, x, page_table, ctx_pos, pos_q,
     (Cp,) precomputed slab write targets for the chunk positions (ring-
     overwritten and padded positions already routed to the null page).
     Returns (x, new slab).
+
+    ``axis``: sequence-parallel serving — the slab / page table / ctx
+    positions / step tables / write targets are this shard's slice, the
+    chunk activations and fresh chunk KV are replicated, and each layer's
+    attention merges its partial across the mesh axis (one cross-shard
+    combine per layer inside the scan).
     """
     from repro.serve.paged_cache import PagedSlab
 
@@ -276,7 +284,7 @@ def segment_chunk_prefill(params, slab, x, page_table, ctx_pos, pos_q,
         ctx_v = v_l[page_table].reshape(1, npp * page, Hkv, hd)
         x, k_c, v_c = block_chunk_prefill(
             layer_params, x, ctx_k, ctx_v, ctx_pos, pos_q, kv_blocks,
-            flags, cfg, kind, pattern)
+            flags, cfg, kind, pattern, axis=axis)
         k_l = k_l.at[phys_w, off_w].set(k_c[0].astype(k_l.dtype))
         v_l = v_l.at[phys_w, off_w].set(v_c[0].astype(v_l.dtype))
         return x, (k_l, v_l)
@@ -287,9 +295,11 @@ def segment_chunk_prefill(params, slab, x, page_table, ctx_pos, pos_q,
 
 def segment_decode_paged(params, slab, x_t, page_tables, slot_pos, t_vec,
                          phys_w, off_w, cfg: ModelConfig, kind: str,
-                         pattern, impl: str):
+                         pattern, impl: str, axis=None):
     """Scan one stacked segment for one ragged decode step. Returns
-    (x_t, new slab)."""
+    (x_t, new slab). ``axis``: sequence-parallel serving (per-shard slab
+    slice + cross-shard partial merge per layer, see
+    :func:`repro.models.layers.attn_decode_paged`)."""
     from repro.serve.paged_cache import PagedSlab
 
     def body(carry, inp):
@@ -297,7 +307,7 @@ def segment_decode_paged(params, slab, x_t, page_tables, slot_pos, t_vec,
         layer_params, (k_l, v_l) = inp
         x_t, k_l, v_l = block_decode_paged(
             layer_params, x_t, k_l, v_l, page_tables, slot_pos, t_vec,
-            phys_w, off_w, cfg, kind, pattern, impl)
+            phys_w, off_w, cfg, kind, pattern, impl, axis=axis)
         return x_t, (k_l, v_l)
 
     x_t, (k_new, v_new) = jax.lax.scan(body, x_t, (params, (slab.k, slab.v)))

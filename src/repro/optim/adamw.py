@@ -1,8 +1,9 @@
 """AdamW with dtype-configurable moments (built from scratch — no optax).
 
 At 480B/1T-parameter scale the optimizer state dominates HBM: fp32 m/v for a
-1T model is 8 TB. ``moment_dtype="bfloat16"`` halves it (recorded per-cell in
-EXPERIMENTS.md); state is sharded exactly like the parameters.
+1T model is 8 TB. ``moment_dtype="bfloat16"`` halves it (the launch.specs
+train-cell default above 10B params); state is sharded exactly like the
+parameters.
 """
 from __future__ import annotations
 

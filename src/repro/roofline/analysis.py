@@ -1,4 +1,5 @@
-"""Roofline analysis from compiled dry-run artifacts (EXPERIMENTS.md §Roofline).
+"""Roofline analysis from compiled dry-run artifacts
+(tabulated by benchmarks/roofline_report.py).
 
 Three terms per (arch x shape x mesh) cell, all in seconds:
 
@@ -202,7 +203,7 @@ def kernel_attention_bytes(pattern, n: int, n_heads: int, head_dim: int,
     (TPU target): per grid cell, Q/K/V tiles in + out tile written once.
     Score tensors stay in VMEM (the kernel's whole point) — this is the
     memory-roofline term the blockwise-XLA dry-run CANNOT show on CPU
-    (its HLO materializes the interior; see EXPERIMENTS.md §Perf gemma).
+    (its HLO materializes the interior).
     """
     from repro.core.scheduler import schedule
 

@@ -57,8 +57,15 @@ class Batcher:
     """Admission, per-step batch assembly, completion/eviction."""
 
     def __init__(self, layout: PagedLayout, n_pages: int, max_batch: int):
+        # One allocator per sequence shard (layout.shards == 1 -> exactly
+        # the single-pool engine): every request takes pages_per_shard
+        # pages from EVERY shard's pool, so the pools advance in lockstep
+        # and ``n_pages`` is the per-shard pool size. Request.pages
+        # concatenates the per-shard page ids (shard-local id spaces) —
+        # entry j names a physical page on shard j // pages_per_shard.
         self.layout = layout
-        self.alloc = PageAllocator(n_pages)
+        self.allocs = [PageAllocator(n_pages) for _ in range(layout.shards)]
+        self.alloc = self.allocs[0]
         self.max_batch = max_batch
         self.queue: List[Request] = []
         self.rows: List[Optional[Request]] = [None] * max_batch
@@ -82,10 +89,11 @@ class Batcher:
                        None)
             if row is None:
                 break
-            if not self.alloc.can_alloc(self.layout.pages_per_req):
+            pps = self.layout.pages_per_shard
+            if not all(a.can_alloc(pps) for a in self.allocs):
                 break  # head-of-line waits for an eviction to recycle pages
             req = self.queue.pop(0)
-            req.pages = self.alloc.alloc(self.layout.pages_per_req)
+            req.pages = np.concatenate([a.alloc(pps) for a in self.allocs])
             req.row = row
             req.state = PREFILL
             self.rows[row] = req
@@ -120,7 +128,9 @@ class Batcher:
     def finish(self, req: Request) -> None:
         """Completion/eviction: recycle the pages, free the row."""
         req.state = DONE
-        self.alloc.release(req.pages)
+        pps = self.layout.pages_per_shard
+        for s, a in enumerate(self.allocs):
+            a.release(req.pages[s * pps: (s + 1) * pps])
         req.pages = None
         self.rows[req.row] = None
         req.row = -1

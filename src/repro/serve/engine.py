@@ -98,12 +98,21 @@ class ContinuousConfig:
     engine rows (max concurrent requests); ``decode_impl`` selects the
     ragged decode engine: ``xla`` (gather + ragged twin — trains anywhere),
     ``pallas`` (the paged kernel; degrades to xla off-TPU) or
-    ``pallas_interpret`` (CPU numerics check of the kernel)."""
+    ``pallas_interpret`` (CPU numerics check of the kernel).
+
+    ``seq_shards > 1`` shards the engine over the "seq" mesh axis
+    (sequence-parallel serving): each shard holds its OWN ``n_pages``-page
+    slab pool covering the request slots it owns (contiguous page
+    striping — see :class:`repro.serve.paged_cache.PagedLayout`), chunked
+    prefill and ragged decode run one launch per shard over per-shard step
+    tables / page tables / slot maps, and per-layer partials combine by a
+    masked psum. Greedy output stays token-exact vs ``seq_shards=1``."""
     n_pages: int
     page: int = 8
     chunk: int = 16
     max_batch: int = 4
     decode_impl: str = "xla"
+    seq_shards: int = 1
 
 
 class ContinuousEngine:
@@ -115,7 +124,8 @@ class ContinuousEngine:
     recurrent / encoder-decoder programs keep the lockstep path.
     """
 
-    def __init__(self, model: Model, ccfg: ContinuousConfig):
+    def __init__(self, model: Model, ccfg: ContinuousConfig, mesh=None,
+                 seq_axis: str = "seq"):
         from repro.models import layers as L
         from repro.models import transformer as T
         from repro.serve.batcher import Batcher
@@ -130,66 +140,127 @@ class ContinuousEngine:
                     f"continuous serving needs attention blocks, got {kind}")
         self.model = model
         self.ccfg = ccfg
+        self.n_shards = ccfg.seq_shards
+        self.mesh, self.seq_axis = mesh, seq_axis
+        if self.n_shards > 1:
+            if mesh is None or dict(zip(mesh.axis_names, mesh.devices.shape)
+                                    ).get(seq_axis, 0) != self.n_shards:
+                raise ValueError(
+                    f"seq_shards={self.n_shards} needs a mesh with a "
+                    f"{seq_axis!r} axis of that size, got {mesh}")
         self.pattern = L.salo_pattern(cfg, causal=True)
         if self.pattern.is_2d or not self.pattern.causal:
             raise NotImplementedError("continuous serving: causal 1-D only")
-        self.layout = layout_for_pattern(self.pattern, ccfg.page)
+        self.layout = layout_for_pattern(self.pattern, ccfg.page,
+                                         shards=self.n_shards)
         self.batcher = Batcher(self.layout, ccfg.n_pages, ccfg.max_batch)
 
         lay = self.layout
         self.chunk_pad = -(-max(ccfg.chunk, 1) // ccfg.page) * ccfg.page
         self.nq = self.chunk_pad // ccfg.page
         self.ctx_len = lay.n_sink + lay.ring_cap
-        self.table_w = (self.ctx_len + self.chunk_pad) // ccfg.page
+        # step-table width: per shard under SP (owned ctx tiles + chunk),
+        # the full view on a single device — one compiled step per engine
+        self.table_w = (self.ctx_len // self.n_shards
+                        + self.chunk_pad) // ccfg.page
 
         dtype = jnp.dtype(cfg.compute_dtype)
+        shard_dims = (self.n_shards,) if self.n_shards > 1 else ()
         self.slabs = {
             f"seg{i}_{kind}": slab_init(n, ccfg.n_pages, ccfg.page,
-                                        cfg.n_kv_heads, cfg.hd, dtype)
+                                        cfg.n_kv_heads, cfg.hd, dtype,
+                                        lead=shard_dims)
             for i, (kind, n) in enumerate(model.program)}
-        from repro.serve.paged_cache import empty_positions
-        self.slot_pos = empty_positions(ccfg.max_batch, lay)
+        from repro.core.scheduler import PAD_SENTINEL
+        if self.n_shards > 1:
+            self.slot_pos = jnp.full(
+                (self.n_shards, ccfg.max_batch, lay.slots_per_shard),
+                PAD_SENTINEL, jnp.int32)
+            self._shard_state()
+        else:
+            from repro.serve.paged_cache import empty_positions
+            self.slot_pos = empty_positions(ccfg.max_batch, lay)
         self.page_tables = np.zeros((ccfg.max_batch, lay.pages_per_req),
                                     np.int32)
         self.counters = {"prefill_launches": 0, "decode_launches": 0,
                          "prefill_tokens": 0, "decode_tokens": 0}
-        self._chunk_jit = jax.jit(self._chunk_fn)
-        self._decode_jit = jax.jit(self._decode_fn)
+        if self.n_shards > 1:
+            self._chunk_jit = jax.jit(self._chunk_sharded)
+            self._decode_jit = jax.jit(self._decode_sharded)
+        else:
+            self._chunk_jit = jax.jit(self._chunk_fn)
+            self._decode_jit = jax.jit(self._decode_fn)
+
+    def _shard_state(self):
+        """Pin the stacked (shard-leading) device state to the mesh."""
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        sh = NamedSharding(self.mesh, P(self.seq_axis))
+        self.slabs = jax.device_put(self.slabs, sh)
+        self.slot_pos = jax.device_put(self.slot_pos, sh)
 
     # -------------------------- jitted steps --------------------------- #
-    def _chunk_fn(self, params, slabs, page_table, ctx_pos, pos_q, tokens,
-                  kv_blocks, flags, phys_w, off_w):
+    def _run_lm(self, params, slabs, x, seg_step):
+        """THE model core shared by the four engine steps (single/sharded
+        x chunk/decode): run every stacked segment through ``seg_step``,
+        then the final norm + logits head. ``x``: embedded inputs."""
+        from repro.models import layers as L
+
+        cfg = self.model.cfg
+        new_slabs = {}
+        for i, (kind, n) in enumerate(self.model.program):
+            key = f"seg{i}_{kind}"
+            x, new_slabs[key] = seg_step(kind, params[key], slabs[key], x)
+        x = L.rmsnorm(params["ln_f"], x, cfg.norm_eps)
+        logits = L.logits_apply(params["embed"], params.get("lm_head"),
+                                x, cfg)
+        return logits, new_slabs
+
+    def _chunk_core(self, params, slabs, page_table, ctx_pos, pos_q,
+                    tokens, kv_blocks, flags, phys_w, off_w, axis=None):
         """One plan-driven prefill chunk for ONE request (all layers).
 
         All operands are fixed-shape (chunk padded to ``chunk_pad``, tables
         to ``table_w``), so every chunk of every request reuses one
-        compilation. Returns (chunk logits (Cp, V), new slabs)."""
-        from repro.models import layers as L
+        compilation. Returns (chunk logits (Cp, V), new slabs). ``axis``:
+        running as one shard of the "seq" mesh (per-shard operands,
+        cross-shard attention merge)."""
         from repro.models import transformer as T
 
         cfg = self.model.cfg
         x = self.model._embed_inputs(params, {"tokens": tokens[None]})
-        new_slabs = {}
-        for i, (kind, n) in enumerate(self.model.program):
-            key = f"seg{i}_{kind}"
-            x, new_slabs[key] = T.segment_chunk_prefill(
-                params[key], slabs[key], x, page_table, ctx_pos[None],
-                pos_q[None], kv_blocks, flags, phys_w, off_w, cfg, kind,
-                self.pattern)
-        x = L.rmsnorm(params["ln_f"], x, cfg.norm_eps)
-        logits = L.logits_apply(params["embed"], params.get("lm_head"),
-                                x, cfg)
+        logits, new_slabs = self._run_lm(
+            params, slabs, x,
+            lambda kind, p, s, x: T.segment_chunk_prefill(
+                p, s, x, page_table, ctx_pos[None], pos_q[None], kv_blocks,
+                flags, phys_w, off_w, cfg, kind, self.pattern, axis=axis))
         return logits[0], new_slabs
 
-    def _decode_fn(self, params, slabs, page_tables, slot_pos, tokens,
-                   t_vec, active):
-        """One ragged decode step for the WHOLE cohort: every in-flight
-        request advances one token at its own position. Inactive rows write
-        to the null page and their logits are discarded."""
-        from repro.models import layers as L
+    def _decode_core(self, params, slabs, page_tables, slot_pos, tokens,
+                     t_vec, phys_w, off_w, axis=None):
+        """One ragged decode step for the WHOLE cohort, write targets
+        already resolved (null page for dropped writes). Returns
+        (logits (R, V), new slabs)."""
         from repro.models import transformer as T
 
         cfg = self.model.cfg
+        x = self.model._embed_inputs(params, {"tokens": tokens[:, None]})
+        logits, new_slabs = self._run_lm(
+            params, slabs, x,
+            lambda kind, p, s, x: T.segment_decode_paged(
+                p, s, x, page_tables, slot_pos, t_vec, phys_w, off_w, cfg,
+                kind, self.pattern, self.ccfg.decode_impl, axis=axis))
+        return logits[:, 0, :], new_slabs
+
+    def _chunk_fn(self, params, slabs, page_table, ctx_pos, pos_q, tokens,
+                  kv_blocks, flags, phys_w, off_w):
+        return self._chunk_core(params, slabs, page_table, ctx_pos, pos_q,
+                                tokens, kv_blocks, flags, phys_w, off_w)
+
+    def _decode_fn(self, params, slabs, page_tables, slot_pos, tokens,
+                   t_vec, active):
+        """Every in-flight request advances one token at its own position.
+        Inactive rows write to the null page; their logits are discarded."""
         R = tokens.shape[0]
         lay = self.layout
         slot = lay.slot(t_vec)
@@ -198,18 +269,87 @@ class ContinuousEngine:
         rows = jnp.arange(R)
         slot_pos = slot_pos.at[rows, slot].set(
             jnp.where(active, t_vec, slot_pos[rows, slot]))
-        x = self.model._embed_inputs(params, {"tokens": tokens[:, None]})
-        new_slabs = {}
-        for i, (kind, n) in enumerate(self.model.program):
-            key = f"seg{i}_{kind}"
-            x, new_slabs[key] = T.segment_decode_paged(
-                params[key], slabs[key], x, jnp.asarray(page_tables),
-                slot_pos, t_vec, phys_w, off_w, cfg, kind, self.pattern,
-                self.ccfg.decode_impl)
-        x = L.rmsnorm(params["ln_f"], x, cfg.norm_eps)
-        logits = L.logits_apply(params["embed"], params.get("lm_head"),
-                                x, cfg)
-        return logits[:, 0, :], new_slabs, slot_pos
+        logits, new_slabs = self._decode_core(
+            params, slabs, jnp.asarray(page_tables), slot_pos, tokens,
+            t_vec, phys_w, off_w)
+        return logits, new_slabs, slot_pos
+
+    # --------------------- sharded (seq-parallel) steps ----------------- #
+    def _chunk_sharded(self, params, slabs, page_table, ctx_pos, pos_q,
+                       tokens, kv_blocks, flags, phys_w, off_w):
+        """One prefill chunk under sequence parallelism: ONE launch per
+        shard over per-shard tables, per-layer masked-psum merge.
+
+        Shard-leading operands (sharded over the "seq" axis): ``slabs``
+        (S, L, n_pages, page, Hkv, hd), ``page_table`` (S, npp_s),
+        ``ctx_pos`` (S, S_s), ``kv_blocks``/``flags`` (S, nq, W_s),
+        ``phys_w``/``off_w`` (S, Cp) — non-owned chunk positions already
+        routed to the null page. ``pos_q``/``tokens`` (Cp,) replicated."""
+        from jax.sharding import PartitionSpec as P
+
+        from repro.compat import shard_map
+
+        ax = self.seq_axis
+
+        def local(params, slabs, page_table, ctx_pos, kv_blocks, flags,
+                  phys_w, off_w, pos_q, tokens):
+            slabs = jax.tree.map(lambda a: a[0], slabs)
+            logits, new_slabs = self._chunk_core(
+                params, slabs, page_table[0], ctx_pos[0], pos_q, tokens,
+                kv_blocks[0], flags[0], phys_w[0], off_w[0], axis=ax)
+            return logits, jax.tree.map(lambda a: a[None], new_slabs)
+
+        fn = shard_map(
+            local, mesh=self.mesh,
+            in_specs=(P(), P(ax), P(ax), P(ax), P(ax), P(ax), P(ax), P(ax),
+                      P(), P()),
+            out_specs=(P(), P(ax)), check_vma=False)
+        return fn(params, slabs, page_table, ctx_pos, kv_blocks, flags,
+                  phys_w, off_w, pos_q, tokens)
+
+    def _decode_sharded(self, params, slabs, page_tables, slot_pos, tokens,
+                        t_vec, active):
+        """One ragged decode step under sequence parallelism: each shard
+        attends its owned slots (per-shard page tables + slot map), the
+        new KV is written only by the written slot's owner, and per-layer
+        (out, m, l) partials combine by masked psum — the sharded decode
+        slot map. ``page_tables`` (S, R, npp_s), ``slot_pos`` (S, R, S_s);
+        tokens/t_vec/active replicated."""
+        from jax.sharding import PartitionSpec as P
+
+        from repro.compat import shard_map
+
+        ax, lay = self.seq_axis, self.layout
+        R = tokens.shape[0]
+        page = self.ccfg.page
+
+        def local(params, slabs, page_tables, slot_pos, tokens, t_vec,
+                  active):
+            slabs = jax.tree.map(lambda a: a[0], slabs)
+            page_tables, slot_pos = page_tables[0], slot_pos[0]
+            idx = jax.lax.axis_index(ax)
+            slot = lay.slot(t_vec)
+            keep = active & (lay.slot_owner(slot) == idx)
+            local_slot = lay.slot_local(slot)
+            phys = jnp.take_along_axis(
+                page_tables, (local_slot // page)[:, None], axis=1)[:, 0]
+            phys = jnp.where(keep, phys, 0)
+            off = jnp.where(keep, local_slot % page, 0)
+            rows = jnp.arange(R)
+            slot_pos = slot_pos.at[rows, local_slot].set(
+                jnp.where(keep, t_vec, slot_pos[rows, local_slot]))
+            logits, new_slabs = self._decode_core(
+                params, slabs, page_tables, slot_pos, tokens, t_vec, phys,
+                off, axis=ax)
+            return (logits, jax.tree.map(lambda a: a[None], new_slabs),
+                    slot_pos[None])
+
+        fn = shard_map(
+            local, mesh=self.mesh,
+            in_specs=(P(), P(ax), P(ax), P(ax), P(), P(), P()),
+            out_specs=(P(), P(ax), P(ax)), check_vma=False)
+        return fn(params, slabs, page_tables, slot_pos, tokens, t_vec,
+                  active)
 
     # --------------------------- host driving -------------------------- #
     def submit(self, prompt, max_new: int) -> int:
@@ -220,14 +360,19 @@ class ContinuousEngine:
 
         for req in self.batcher.admit():
             self.page_tables[req.row] = req.pages
-            self.slot_pos = self.slot_pos.at[req.row].set(PAD_SENTINEL)
+            if self.n_shards > 1:
+                self.slot_pos = self.slot_pos.at[:, req.row].set(
+                    PAD_SENTINEL)
+            else:
+                self.slot_pos = self.slot_pos.at[req.row].set(PAD_SENTINEL)
 
     def _advance_prefill(self, params, req):
-        """Run the request's next chunk: ONE fused table-driven pass."""
+        """Run the request's next chunk: ONE fused table-driven pass
+        (one per shard under sequence parallelism)."""
         from repro.core.scheduler import (BIG, build_chunk_plan,
                                           ring_view_positions)
 
-        lay, page = self.layout, self.ccfg.page
+        lay, page, S = self.layout, self.ccfg.page, self.n_shards
         P = req.prompt_len
         c0 = req.prefilled
         clen = min(self.ccfg.chunk, P - c0)
@@ -235,7 +380,6 @@ class ContinuousEngine:
         plan = build_chunk_plan(self.pattern, c0, clen, n_sink=lay.n_sink,
                                 ring_cap=lay.ring_cap, block=page,
                                 chunk_pad=self.chunk_pad)
-        kv, fl = plan.padded_tables(self.nq, self.table_w)
         ctx_pos = plan.view_positions[: self.ctx_len]
         Cp = self.chunk_pad
         pos_q = np.full(Cp, BIG, np.int32)
@@ -249,26 +393,48 @@ class ContinuousEngine:
             (pos < lay.n_global) | (pos + lay.ring_cap >= c1))
         slot = np.where(pos < lay.n_global, pos,
                         lay.n_sink + (pos - lay.n_global) % lay.ring_cap)
-        phys = np.where(keep, req.pages[slot // page], 0).astype(np.int32)
-        off = np.where(keep, slot % page, 0).astype(np.int32)
-
-        logits, self.slabs = self._chunk_jit(
-            params, self.slabs, jnp.asarray(req.pages),
-            jnp.asarray(ctx_pos), jnp.asarray(pos_q), jnp.asarray(tokens),
-            jnp.asarray(kv), jnp.asarray(fl), jnp.asarray(phys),
-            jnp.asarray(off))
+        if S > 1:
+            kv, fl = plan.sharded_tables(S, self.nq, self.table_w)
+            owner = slot // lay.slots_per_shard
+            local = slot % lay.slots_per_shard
+            pages2d = req.pages.reshape(S, lay.pages_per_shard)
+            keep_s = keep[None] & (owner[None] == np.arange(S)[:, None])
+            phys = np.where(keep_s, pages2d[np.arange(S)[:, None],
+                                            local[None] // page],
+                            0).astype(np.int32)
+            off = np.where(keep_s, local[None] % page, 0).astype(np.int32)
+            logits, self.slabs = self._chunk_jit(
+                params, self.slabs,
+                jnp.asarray(pages2d), jnp.asarray(
+                    ctx_pos.reshape(S, lay.slots_per_shard)),
+                jnp.asarray(pos_q), jnp.asarray(tokens), jnp.asarray(kv),
+                jnp.asarray(fl), jnp.asarray(phys), jnp.asarray(off))
+        else:
+            kv, fl = plan.padded_tables(self.nq, self.table_w)
+            phys = np.where(keep, req.pages[slot // page], 0).astype(np.int32)
+            off = np.where(keep, slot % page, 0).astype(np.int32)
+            logits, self.slabs = self._chunk_jit(
+                params, self.slabs, jnp.asarray(req.pages),
+                jnp.asarray(ctx_pos), jnp.asarray(pos_q),
+                jnp.asarray(tokens), jnp.asarray(kv), jnp.asarray(fl),
+                jnp.asarray(phys), jnp.asarray(off))
         self.counters["prefill_launches"] += 1
         self.counters["prefill_tokens"] += clen
         req.prefilled = c1
         if c1 == P:
             first = int(np.argmax(np.asarray(logits[clen - 1])))
-            self.slot_pos = self.slot_pos.at[req.row].set(
-                jnp.asarray(ring_view_positions(P, lay.n_sink, lay.ring_cap,
-                                                lay.n_global)))
+            rvp = ring_view_positions(P, lay.n_sink, lay.ring_cap,
+                                      lay.n_global)
+            if S > 1:
+                self.slot_pos = self.slot_pos.at[:, req.row].set(
+                    jnp.asarray(rvp.reshape(S, lay.slots_per_shard)))
+            else:
+                self.slot_pos = self.slot_pos.at[req.row].set(
+                    jnp.asarray(rvp))
             self.batcher.to_decode(req, first)
 
     def _advance_decode(self, params, reqs):
-        R = self.ccfg.max_batch
+        R, S = self.ccfg.max_batch, self.n_shards
         tokens = np.zeros(R, np.int32)
         t_vec = np.zeros(R, np.int32)
         active = np.zeros(R, bool)
@@ -276,8 +442,11 @@ class ContinuousEngine:
             tokens[req.row] = req.out[-1]
             t_vec[req.row] = req.t_next
             active[req.row] = True
+        page_tables = (self.page_tables.reshape(
+            R, S, self.layout.pages_per_shard).transpose(1, 0, 2).copy()
+            if S > 1 else self.page_tables.copy())
         logits, self.slabs, self.slot_pos = self._decode_jit(
-            params, self.slabs, self.page_tables.copy(),
+            params, self.slabs, page_tables,
             self.slot_pos, jnp.asarray(tokens), jnp.asarray(t_vec),
             jnp.asarray(active))
         self.counters["decode_launches"] += 1
@@ -296,8 +465,8 @@ class ContinuousEngine:
             if self.batcher.queue:
                 raise RuntimeError(
                     "page pool too small for a single request "
-                    f"(need {self.layout.pages_per_req}, "
-                    f"pool {self.batcher.alloc.n_free})")
+                    f"(need {self.layout.pages_per_shard} per shard, "
+                    f"pool {min(a.n_free for a in self.batcher.allocs)})")
             return False
         for req in pre:
             self._advance_prefill(params, req)

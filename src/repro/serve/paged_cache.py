@@ -50,14 +50,27 @@ def _ceil_div(a: int, b: int) -> int:
 
 @dataclasses.dataclass(frozen=True)
 class PagedLayout:
-    """Static per-request geometry of the paged ring cache."""
+    """Static per-request geometry of the paged ring cache.
+
+    ``shards > 1`` is the sequence-parallel serving layout: the request's
+    logical pages are striped contiguously over the ``shards`` devices of
+    the "seq" mesh axis — logical page ``j`` (and every slot inside it) is
+    owned by shard ``j // pages_per_shard``, so sink/global pages land on
+    the shards covering their positions and the ring pages are row-sharded
+    across the rest. ``ring_pages`` absorbs the alignment padding (a ring
+    larger than the dilated lookback is semantically identity: positions
+    older than the lookback are masked out by the window term regardless of
+    whether a slot still holds them).
+    """
     page: int
     window: int
     n_global: int
     dilation: int = 1
+    shards: int = 1
 
     def __post_init__(self):
-        if self.page < 1 or self.window < 1 or self.dilation < 1:
+        if self.page < 1 or self.window < 1 or self.dilation < 1 \
+                or self.shards < 1:
             raise ValueError(f"bad paged layout {self}")
         if self.window > 1 << 28:
             raise ValueError("paged serving needs a bounded window "
@@ -74,7 +87,11 @@ class PagedLayout:
 
     @property
     def ring_pages(self) -> int:
-        return _ceil_div(self.span, self.page)
+        base = _ceil_div(self.span, self.page)
+        # shard alignment: total pages padded so every shard owns the same
+        # number of whole pages (padding slots stay PAD and mask to nothing)
+        pad = -(self.sink_pages + base) % self.shards
+        return base + pad
 
     @property
     def n_sink(self) -> int:
@@ -91,6 +108,24 @@ class PagedLayout:
     @property
     def slots_per_req(self) -> int:
         return self.pages_per_req * self.page
+
+    # ---------------------- sequence-parallel view --------------------- #
+    @property
+    def pages_per_shard(self) -> int:
+        assert self.pages_per_req % self.shards == 0
+        return self.pages_per_req // self.shards
+
+    @property
+    def slots_per_shard(self) -> int:
+        return self.pages_per_shard * self.page
+
+    def slot_owner(self, s):
+        """Shard owning logical slot ``s`` (contiguous page striping)."""
+        return jnp.asarray(s, jnp.int32) // self.slots_per_shard
+
+    def slot_local(self, s):
+        """Shard-local slot index of logical slot ``s``."""
+        return jnp.asarray(s, jnp.int32) % self.slots_per_shard
 
     # ------------------------------------------------------------------ #
     def slot(self, p):
@@ -118,15 +153,17 @@ class PagedLayout:
         return phys, off
 
 
-def layout_for_pattern(pattern, page: int) -> PagedLayout:
+def layout_for_pattern(pattern, page: int, shards: int = 1) -> PagedLayout:
     """THE layout derivation — engine and pool-sizing callers share it, so
-    ``n_pages = 1 + max_batch * layout.pages_per_req`` always matches what
-    admission will actually request."""
+    ``n_pages = 1 + max_batch * layout.pages_per_req`` (or
+    ``pages_per_shard`` per shard pool under sequence parallelism) always
+    matches what admission will actually request."""
     if pattern.is_2d or not pattern.causal:
         raise ValueError(f"paged serving needs a causal 1-D pattern: "
                          f"{pattern}")
     return PagedLayout(page=page, window=pattern.window_size(),
-                       n_global=pattern.n_global, dilation=pattern.dilation)
+                       n_global=pattern.n_global, dilation=pattern.dilation,
+                       shards=shards)
 
 
 class PagedSlab(NamedTuple):
@@ -140,8 +177,10 @@ class PagedSlab(NamedTuple):
 
 
 def slab_init(n_layers: int, n_pages: int, page: int, n_kv_heads: int,
-              head_dim: int, dtype) -> PagedSlab:
-    shape = (n_layers, n_pages, page, n_kv_heads, head_dim)
+              head_dim: int, dtype, lead: tuple = ()) -> PagedSlab:
+    """``lead``: extra leading dims — ``(n_shards,)`` stacks one per-shard
+    pool per sequence shard (row s lives on shard s of the "seq" axis)."""
+    shape = (*lead, n_layers, n_pages, page, n_kv_heads, head_dim)
     return PagedSlab(k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype))
 
 

@@ -13,6 +13,13 @@ rest of the suite keeps its single-device view):
   * pjit'd train step runs under a (2, 4) mesh with the production rules
   * elastic rescale: checkpoint from mesh A restores onto mesh B
   * int8-compressed gradient psum convergence
+  * compress_grads wires compressed_psum into the pod/data reduce INSIDE
+    train_step (shard_map), error feedback converging on the int8 wire
+  * sequence-parallel continuous serving: the 8-shard engine (sharded
+    paged slab + distributed ragged decode) emits greedy tokens identical
+    to the single-device ContinuousEngine across ragged batches, page
+    recycling, ring wraparound across shard boundaries, dilation > 1, and
+    the paged decode kernel inside shard_map
 """
 import os
 import subprocess
@@ -274,6 +281,61 @@ def test_elastic_rescale_8_to_4():
     """)
 
 
+def test_compressed_psum_in_train_step_pod_axis():
+    """compress_grads=True wires compressed_psum into the pod/data-axis
+    reduce INSIDE train_step (shard_map over both axes): the first step's
+    loss matches the pjit fp32 path exactly (loss is computed before the
+    reduce), error feedback keeps convergence on top of the int8 wire, and
+    the per-participant residual state is threaded with the fixed 4-tuple
+    arity."""
+    _run("""
+        from repro.configs import get_smoke
+        from repro.data.pipeline import DataConfig, SyntheticLM
+        from repro.dist import sharding as shlib
+        from repro.models.model import build_model
+        from repro.optim import adamw
+        from repro.train.trainer import TrainConfig, make_train_step
+        cfg = get_smoke("smollm-135m")
+        model = build_model(cfg)
+        params0 = model.init(jax.random.PRNGKey(0))
+        mesh = jax.make_mesh((2, 4), ("pod", "data"))
+        rules = dict(shlib.DEFAULT_RULES, batch=("pod", "data"), fsdp=None)
+        ds = SyntheticLM(cfg, DataConfig(seq_len=64, global_batch=8))
+
+        def run(compress, steps):
+            tcfg = TrainConfig(
+                optimizer=adamw.AdamWConfig(lr=1e-2, grad_clip=1.0),
+                compress_grads=compress)
+            raw = make_train_step(model, tcfg)
+            def fn(p, o, b, ef):
+                with shlib.axis_rules(rules, mesh):
+                    return raw(p, o, b, ef)
+            step = jax.jit(fn)
+            params, opt, ef = params0, adamw.init(tcfg.optimizer,
+                                                  params0), None
+            losses = []
+            with mesh:
+                for i in range(steps):
+                    batch = {k: jnp.asarray(v)
+                             for k, v in ds.batch(i % 4).items()}
+                    params, opt, metrics, ef = step(params, opt, batch, ef)
+                    losses.append(float(metrics["loss"]))
+            return params, losses, ef
+
+        p_ref, l_ref, ef_ref = run(False, 25)
+        p_c, l_c, ef_c = run(True, 25)
+        assert ef_ref is None
+        leaf = jax.tree.leaves(ef_c)[0]
+        assert leaf.shape[0] == 8, leaf.shape  # 2 pod x 4 data participants
+        # first-step loss is pre-reduce: must agree exactly
+        assert abs(l_c[0] - l_ref[0]) < 1e-5, (l_c[0], l_ref[0])
+        # error feedback: int8 wire converges alongside fp32
+        assert l_c[-1] < l_c[0] - 0.5, l_c[::6]
+        assert abs(l_c[-1] - l_ref[-1]) < 0.3, (l_c[-1], l_ref[-1])
+        print("COMPRESSED-TRAIN-STEP-OK", l_c[-1])
+    """)
+
+
 def test_compressed_psum_across_shards():
     _run("""
         from repro.compat import shard_map
@@ -290,6 +352,84 @@ def test_compressed_psum_across_shards():
         rel = float(jnp.max(jnp.abs(out[0] - ref)) / jnp.max(jnp.abs(ref)))
         assert rel < 0.05, rel
         print("COMPRESSED-PSUM-OK", rel)
+    """)
+
+
+# ----------------- sequence-parallel continuous serving ----------------- #
+_SERVE_PRELUDE = """
+        import dataclasses
+        from repro.configs import get_smoke
+        from repro.models.model import build_model
+        from repro.models.layers import salo_pattern
+        from repro.serve.engine import ContinuousConfig, ContinuousEngine
+        from repro.serve.paged_cache import layout_for_pattern
+        mesh = jax.make_mesh((8,), ("seq",))
+        rng = np.random.default_rng(3)
+
+        def pair(cfg, lens, n_new, max_batch, impl="xla", seed=1):
+            '''Greedy tokens of the 8-shard engine must equal the
+            single-device ContinuousEngine token-for-token.'''
+            model = build_model(cfg)
+            params = model.init(jax.random.PRNGKey(seed))
+            prompts = [rng.integers(0, cfg.vocab_size, (L,)).astype(np.int32)
+                       for L in lens]
+            pat = salo_pattern(cfg, causal=True)
+            l1 = layout_for_pattern(pat, 8)
+            e1 = ContinuousEngine(model, ContinuousConfig(
+                n_pages=1 + max_batch * l1.pages_per_req, page=8, chunk=8,
+                max_batch=max_batch, decode_impl=impl))
+            r1 = [e1.submit(p, n_new) for p in prompts]
+            ref = e1.run(params)
+            l8 = layout_for_pattern(pat, 8, shards=8)
+            e8 = ContinuousEngine(model, ContinuousConfig(
+                n_pages=1 + max_batch * l8.pages_per_shard, page=8, chunk=8,
+                max_batch=max_batch, decode_impl=impl, seq_shards=8),
+                mesh=mesh)
+            r8 = [e8.submit(p, n_new) for p in prompts]
+            out = e8.run(params)
+            for a, b in zip(r1, r8):
+                np.testing.assert_array_equal(ref[a], out[b])
+            # per-shard pools fully recycled on completion
+            for al in e8.batcher.allocs:
+                assert al.n_free == e8.ccfg.n_pages - 1
+            return e8
+"""
+
+
+def test_sharded_serving_ragged_and_recycling():
+    """8-shard continuous engine == single-device engine token-for-token on
+    a ragged batch with more requests than rows (page-recycling waves over
+    the per-shard pools), and with the paged decode KERNEL inside
+    shard_map (pallas_interpret partial-state path)."""
+    _run(_SERVE_PRELUDE + """
+        cfg = get_smoke("smollm-135m")
+        pair(cfg, (5, 11, 7, 9, 6), 4, 2)
+        print("RAGGED-RECYCLE-OK")
+        pair(cfg, (7, 12), 4, 2, impl="pallas_interpret")
+        print("SHARDED-KERNEL-OK")
+        # bf16 compute: partials stay f32 until ONE post-merge round, so
+        # the low-precision dtype must not break token-exactness either
+        cfgb = dataclasses.replace(cfg, compute_dtype="bfloat16")
+        pair(cfgb, (9, 14), 6, 2, seed=2)
+        print("SHARDED-BF16-OK")
+    """)
+
+
+def test_sharded_serving_ring_wraparound_and_dilation():
+    """Ring wraparound ACROSS shard boundaries: window=8 with 8 shards puts
+    each shard's slice at a couple of ring slots, and t >> window drives
+    many revolutions through all of them; dilation > 1 exercises the
+    dilated-lookback ring under the sharded slot map."""
+    _run(_SERVE_PRELUDE + """
+        cfg = get_smoke("smollm-135m")
+        cfgw = dataclasses.replace(cfg, salo=dataclasses.replace(
+            cfg.salo, window=8))
+        pair(cfgw, (21, 6), 40, 2)
+        print("SHARD-WRAP-OK")
+        cfgd = dataclasses.replace(cfg, salo=dataclasses.replace(
+            cfg.salo, window=4, dilation=2, n_global=2))
+        pair(cfgd, (11, 17), 10, 2)
+        print("SHARD-DILATED-OK")
     """)
 
 

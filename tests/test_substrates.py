@@ -210,11 +210,13 @@ def test_train_step_decreases_loss():
     opt = adamw.init(tcfg.optimizer, params)
     ds = SyntheticLM(cfg, DataConfig(seq_len=64, global_batch=8))
     losses = []
+    ef = None
     for i in range(30):
         batch = {k: jnp.asarray(v) for k, v in ds.batch(i % 4).items()}
-        params, opt, metrics = step(params, opt, batch)
+        params, opt, metrics, ef = step(params, opt, batch, ef)
         losses.append(float(metrics["loss"]))
     assert losses[-1] < losses[0] - 0.5, losses[::6]
+    assert ef is None  # no compression -> no error-feedback state
 
 
 def test_train_step_microbatch_equivalence():
@@ -234,7 +236,7 @@ def test_train_step_microbatch_equivalence():
                            microbatches=mb)
         step = make_train_step(model, tcfg)
         opt = adamw.init(tcfg.optimizer, params)
-        p2, _, m = step(params, opt, batch)
+        p2, _, m, _ef = step(params, opt, batch)
         outs[mb] = p2
     flat1 = jax.tree.leaves(outs[1])
     flat2 = jax.tree.leaves(outs[2])
@@ -242,3 +244,75 @@ def test_train_step_microbatch_equivalence():
         np.testing.assert_allclose(np.asarray(a, np.float32),
                                    np.asarray(b, np.float32),
                                    rtol=2e-3, atol=2e-4)
+
+
+def test_microbatch_metrics_averaged_and_grad_dtype():
+    """mb > 1 aux metrics are the MEAN across microbatches (the old code
+    reported only the last microbatch's), and both mb paths hand the
+    optimizer f32 grads (the mb==1 path used to pass param-dtype)."""
+    from repro.configs import get_smoke
+    from repro.data.pipeline import DataConfig, SyntheticLM
+    from repro.models.model import build_model
+    from repro.train import trainer as trmod
+    from repro.train.trainer import TrainConfig, make_train_step
+    cfg = get_smoke("smollm-135m")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    ds = SyntheticLM(cfg, DataConfig(seq_len=32, global_batch=4))
+    batch = {k: jnp.asarray(v) for k, v in ds.batch(0).items()}
+    mb = 4
+
+    # per-microbatch reference nll (each slice through model.loss directly)
+    per = []
+    for i in range(mb):
+        mbatch = {k: v[i: i + 1] for k, v in batch.items()}
+        _, m = model.loss(params, mbatch)
+        per.append(float(m["nll"]))
+
+    seen = {}
+    orig = adamw.update
+
+    def spy(cfg_, state, params_, grads, lr):
+        seen["dtypes"] = set(g.dtype for g in jax.tree.leaves(grads))
+        return orig(cfg_, state, params_, grads, lr)
+
+    trmod.adamw.update = spy
+    try:
+        for mbs in (1, mb):
+            tcfg = TrainConfig(optimizer=adamw.AdamWConfig(lr=1e-3),
+                               microbatches=mbs)
+            step = make_train_step(model, tcfg)
+            opt = adamw.init(tcfg.optimizer, params)
+            _, _, metrics, _ = step(params, opt, batch)
+            assert seen["dtypes"] == {jnp.dtype(jnp.float32)}, \
+                (mbs, seen["dtypes"])
+        np.testing.assert_allclose(float(metrics["nll"]),
+                                   np.mean(per), rtol=1e-5)
+    finally:
+        trmod.adamw.update = orig
+
+
+def test_compress_grads_single_device_ef_threading():
+    """compress_grads on one device: local quantize-dequantize + error
+    feedback, ef_state threaded through the fixed 4-tuple arity (the old
+    3-vs-4-tuple switch broke donate_argnums callers)."""
+    from repro.configs import get_smoke
+    from repro.data.pipeline import DataConfig, SyntheticLM
+    from repro.models.model import build_model
+    from repro.train.trainer import TrainConfig, make_train_step
+    cfg = get_smoke("smollm-135m")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    tcfg = TrainConfig(optimizer=adamw.AdamWConfig(lr=1e-2, grad_clip=1.0),
+                       compress_grads=True)
+    step = make_train_step(model, tcfg)
+    opt = adamw.init(tcfg.optimizer, params)
+    ds = SyntheticLM(cfg, DataConfig(seq_len=64, global_batch=8))
+    ef, losses = None, []
+    for i in range(30):
+        batch = {k: jnp.asarray(v) for k, v in ds.batch(i % 4).items()}
+        params, opt, metrics, ef = step(params, opt, batch, ef)
+        losses.append(float(metrics["loss"]))
+    assert ef is not None
+    assert jax.tree.structure(ef) == jax.tree.structure(params)
+    assert losses[-1] < losses[0] - 0.5, losses[::6]
