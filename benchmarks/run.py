@@ -89,6 +89,25 @@ def main() -> None:
         failures.append(("serve_decode_launches",
                          d["serve/decode_launch_reduction"],
                          "> 1.0 (ragged batching shares launches)"))
+    # quantized serving: int8 slab must be close to 4x smaller than the
+    # f32 compute-dtype slab (scales are the only overhead), the int8
+    # engine greedy-exact vs fp on the smoke workload, threshold=-inf
+    # token-identical to the machinery being off, page skipping must
+    # actually engage (at parity with the dense-read int8 twin), and the
+    # 8-shard int8+sparse engine must match its single-device twin
+    if "serve/quant_slab_bytes_ratio" in d and \
+            d["serve/quant_slab_bytes_ratio"] < 3.5:
+        failures.append(("quant_slab_bytes", d["serve/quant_slab_bytes_ratio"],
+                         ">= 3.5 (int8 slab vs f32 slab)"))
+    for k in ("serve/quant_parity_vs_fp", "serve/quant_keepall_exact",
+              "serve/quant_sparse_parity", "serve/quant_sharded_parity"):
+        if k in d and d[k] != 1.0:
+            failures.append((k, d[k], "== 1.0"))
+    if "serve/quant_page_read_fraction" in d and \
+            d["serve/quant_page_read_fraction"] >= 1.0:
+        failures.append(("quant_page_reads",
+                         d["serve/quant_page_read_fraction"],
+                         "< 1.0 (stats-driven page skipping engages)"))
     # sequence parallelism: halo exchange must beat the all-gather ring on
     # EVERY workload (the (w+Bk)·d vs n·d claim), and the sharded engines
     # must be numerically identical to the single-device fused path

@@ -21,14 +21,38 @@ and with ``measure`` (wall-clock, host CPU — the TPU story is the kernels'):
     batch ragged requests without padding semantics changes — that gap IS
     the subsystem's reason to exist).
 
+Quantized serving (section ``quant`` of the JSON, always collected):
+
+  * **int8 slab footprint** — resident bytes of the int8 slab (K/V int8 +
+    per-(layer, page) f32 scales) vs the same pool in the compute dtype,
+    gated >= 3.5x smaller (f32 smoke compute dtype -> ~4x minus scales);
+  * **quantized greedy parity** — int8 engine tokens vs the fp engine,
+    per-request exact-match rate, gated == 1.0 on the smoke workload;
+  * **keep-all exactness** — ``page_sparsity_threshold=-inf`` (stats
+    machinery ON, nothing skipped) must be token-identical to the int8
+    engine with the machinery off — the read-masking-only invariant;
+  * **stats-driven page skipping** — a window-64 variant with a finite
+    threshold + decay: fraction of decode page reads actually issued
+    (gated < 1.0 — skipping must engage) at token parity with its own
+    dense-read int8 reference;
+
+and with ``measure``: an 8-shard (forced host devices, subprocess) int8 +
+page-sparse engine vs its single-device twin, gated token-exact — scales
+stripe with the pages and the keep mask comes from merged shard stats.
+
 Used by ``python -m benchmarks.run`` (section ``serve/``, launch-count and
 parity gates) and writable standalone via ``python -m benchmarks.serve_stats``.
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import math
+import os
+import subprocess
+import sys
+import textwrap
 import time
 
 import jax
@@ -40,6 +64,17 @@ N_NEW = 8
 CHUNK = 8
 PAGE = 8
 LONG_CTX = 32_768  # footprint comparison point for the dense baseline
+
+# stats-driven page-sparse variant: a wider window gives each request a
+# page tail the history can actually retire (decay must be > 0 or the
+# optimistic init never drops below the threshold). -3.0 is the loosest
+# threshold that still skips pages on this workload while staying
+# greedy-exact — the random-init smoke model has near-tie logits, so
+# aggressive thresholds (e.g. -0.3 -> ~40% reads) flip some argmaxes
+QUANT_WINDOW = 64
+QUANT_N_NEW = 24
+QUANT_THRESHOLD = -3.0
+QUANT_DECAY = 0.3
 
 
 def _build():
@@ -56,6 +91,131 @@ def _build():
         n_pages=1 + len(PROMPT_LENS) * lay.pages_per_req, page=PAGE,
         chunk=CHUNK, max_batch=len(PROMPT_LENS)))
     return cfg, model, eng
+
+
+def _engine_for(cfg, model, *, kv_dtype="compute", thr=None, decay=0.0):
+    from repro.models.layers import salo_pattern
+    from repro.serve.engine import ContinuousConfig, ContinuousEngine
+    from repro.serve.paged_cache import layout_for_pattern
+
+    lay = layout_for_pattern(salo_pattern(cfg, causal=True), PAGE)
+    return ContinuousEngine(model, ContinuousConfig(
+        n_pages=1 + len(PROMPT_LENS) * lay.pages_per_req, page=PAGE,
+        chunk=CHUNK, max_batch=len(PROMPT_LENS), kv_dtype=kv_dtype,
+        page_sparsity_threshold=thr, page_stat_decay=decay))
+
+
+def _quant_section(cfg, model, params, prompts) -> dict:
+    """Quantized-serving stats: int8 footprint + parity, keep-all
+    exactness, and the stats-driven page-sparse variant."""
+    from repro.models.model import build_model
+
+    def run(eng, pp, n_new):
+        rids = [eng.submit(p, n_new) for p in prompts]
+        res = eng.run(pp)
+        return [res[r] for r in rids]
+
+    fp_eng = _engine_for(cfg, model)
+    fp_toks = run(fp_eng, params, N_NEW)
+    q_eng = _engine_for(cfg, model, kv_dtype="int8")
+    q_toks = run(q_eng, params, N_NEW)
+    ka_eng = _engine_for(cfg, model, kv_dtype="int8",
+                         thr=float("-inf"), decay=QUANT_DECAY)
+    ka_toks = run(ka_eng, params, N_NEW)
+    assert (ka_eng.counters["decode_pages_read"]
+            == ka_eng.counters["decode_pages_total"])
+
+    fp_bytes = fp_eng.slab_resident_bytes()
+    q_bytes = q_eng.slab_resident_bytes()
+    parity = float(np.mean([np.array_equal(a, b)
+                            for a, b in zip(q_toks, fp_toks)]))
+    keepall = float(all(np.array_equal(a, b)
+                        for a, b in zip(ka_toks, q_toks)))
+
+    # page-sparse variant on the wide-window model: compare against its
+    # OWN dense-read int8 twin (same model/params), so the only delta is
+    # the keep mask
+    cfg64 = dataclasses.replace(
+        cfg, salo=dataclasses.replace(cfg.salo, window=QUANT_WINDOW))
+    model64 = build_model(cfg64)
+    params64 = model64.init(jax.random.PRNGKey(0))
+    d64_toks = run(_engine_for(cfg64, model64, kv_dtype="int8"),
+                   params64, QUANT_N_NEW)
+    sp_eng = _engine_for(cfg64, model64, kv_dtype="int8",
+                         thr=QUANT_THRESHOLD, decay=QUANT_DECAY)
+    sp_toks = run(sp_eng, params64, QUANT_N_NEW)
+    read = sp_eng.counters["decode_pages_read"]
+    total = sp_eng.counters["decode_pages_total"]
+    sparse_parity = float(np.mean([np.array_equal(a, b)
+                                   for a, b in zip(sp_toks, d64_toks)]))
+    return {
+        "fp_slab_resident_bytes": fp_bytes,
+        "int8_slab_resident_bytes": q_bytes,
+        "slab_bytes_ratio": fp_bytes / q_bytes,
+        "parity_vs_fp": parity,
+        "keepall_exact_vs_dense_read": keepall,
+        "sparse": {"window": QUANT_WINDOW, "n_new": QUANT_N_NEW,
+                   "threshold": QUANT_THRESHOLD, "decay": QUANT_DECAY,
+                   "decode_pages_read": read, "decode_pages_total": total,
+                   "page_read_fraction": read / total,
+                   "parity_vs_dense_read": sparse_parity},
+    }
+
+
+_QUANT_SHARD_PROG = """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, numpy as np
+    from repro.configs import get_smoke
+    from repro.models.model import build_model
+    from repro.models.layers import salo_pattern
+    from repro.serve.engine import ContinuousConfig, ContinuousEngine
+    from repro.serve.paged_cache import layout_for_pattern
+
+    cfg = get_smoke("smollm-135m")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size, (L,)).astype(np.int32)
+               for L in (24, 17, 9, 30)]
+    pat = salo_pattern(cfg, causal=True)
+    quant = dict(kv_dtype="int8", page_sparsity_threshold=-0.5,
+                 page_stat_decay=0.3)
+    l1 = layout_for_pattern(pat, 8)
+    e1 = ContinuousEngine(model, ContinuousConfig(
+        n_pages=1 + 4 * l1.pages_per_req, page=8, chunk=8, max_batch=4,
+        **quant))
+    r1 = [e1.submit(p, 8) for p in prompts]
+    ref = e1.run(params)
+    mesh = jax.make_mesh((8,), ("seq",))
+    l8 = layout_for_pattern(pat, 8, shards=8)
+    e8 = ContinuousEngine(model, ContinuousConfig(
+        n_pages=1 + 4 * l8.pages_per_shard, page=8, chunk=8, max_batch=4,
+        seq_shards=8, **quant), mesh=mesh)
+    r8 = [e8.submit(p, 8) for p in prompts]
+    out = e8.run(params)
+    match = all(np.array_equal(ref[a], out[b]) for a, b in zip(r1, r8))
+    skipped = (e8.counters["decode_pages_read"]
+               < e8.counters["decode_pages_total"])
+    print("PARITY", 1.0 if (match and skipped) else 0.0)
+"""
+
+
+def _measure_quant_shard_parity() -> dict:
+    """8-shard int8 + page-sparse engine vs its single-device twin, via a
+    subprocess with 8 forced host devices (same pattern as
+    benchmarks/serve_dist_stats.py). Parity requires token-exact output
+    AND that the sharded engine actually skipped pages."""
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    r = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(_QUANT_SHARD_PROG)],
+        env={**os.environ, "PYTHONPATH": src},
+        capture_output=True, text=True, timeout=900)
+    if r.returncode != 0:
+        raise RuntimeError(
+            f"quant shard parity subprocess failed:\n{r.stderr[-2000:]}")
+    parity = float(r.stdout.strip().split("PARITY")[-1])
+    return {"greedy_token_match": parity, "n_shards": 8}
 
 
 def collect(measure: bool = True) -> dict:
@@ -123,8 +283,10 @@ def collect(measure: bool = True) -> dict:
             "dense_bytes_at_32k": dense,
             "bytes_ratio": dense / slab,
         },
+        "quant": _quant_section(cfg, model, params, prompts),
     }
     if measure:
+        data["quant"]["sharded"] = _measure_quant_shard_parity()
         # second pass for the throughput comparison: resubmit to the SAME
         # engine — its jitted chunk/decode steps are genuinely warm (a
         # fresh engine would recompile). The lockstep side re-traces its
@@ -173,6 +335,25 @@ def serve_benchmark(rows, measure: bool = True,
     rows.append(("serve/cache_bytes_ratio", cache["bytes_ratio"],
                  f"slab={cache['slab_bytes']}_dense32k="
                  f"{cache['dense_bytes_at_32k']}"))
+    qu = data["quant"]
+    rows.append(("serve/quant_slab_bytes_ratio", qu["slab_bytes_ratio"],
+                 f"fp={qu['fp_slab_resident_bytes']}_int8="
+                 f"{qu['int8_slab_resident_bytes']}"))
+    rows.append(("serve/quant_parity_vs_fp", qu["parity_vs_fp"],
+                 "int8_engine==fp_engine_tokens"))
+    rows.append(("serve/quant_keepall_exact",
+                 qu["keepall_exact_vs_dense_read"],
+                 "threshold=-inf==no_stats_machinery"))
+    sp = qu["sparse"]
+    rows.append(("serve/quant_page_read_fraction", sp["page_read_fraction"],
+                 f"read={sp['decode_pages_read']}_total="
+                 f"{sp['decode_pages_total']}_thr={sp['threshold']}"))
+    rows.append(("serve/quant_sparse_parity", sp["parity_vs_dense_read"],
+                 f"page_sparse==dense_read_w{sp['window']}"))
+    if "sharded" in qu:
+        rows.append(("serve/quant_sharded_parity",
+                     qu["sharded"]["greedy_token_match"],
+                     "8shard_int8_sparse==single_device"))
     if "throughput" in data:
         tp = data["throughput"]
         rows.append(("serve/ragged_throughput_speedup", tp["speedup"],
@@ -196,6 +377,26 @@ def main():
         print(f"{name},{value:.6g},{derived}")
     if not args.no_measure:
         print(f"# wrote {args.out}")
+    # standalone quantized-serving gates (benchmarks.run applies the same
+    # ones; --no-measure skips only the 8-shard subprocess row)
+    d = {name: value for name, value, _ in rows}
+    bad = []
+    if d["serve/quant_slab_bytes_ratio"] < 3.5:
+        bad.append(("serve/quant_slab_bytes_ratio",
+                    d["serve/quant_slab_bytes_ratio"], ">= 3.5"))
+    for k in ("serve/greedy_parity", "serve/quant_parity_vs_fp",
+              "serve/quant_keepall_exact", "serve/quant_sparse_parity",
+              "serve/quant_sharded_parity"):
+        if k in d and d[k] != 1.0:
+            bad.append((k, d[k], "== 1.0"))
+    if d["serve/quant_page_read_fraction"] >= 1.0:
+        bad.append(("serve/quant_page_read_fraction",
+                    d["serve/quant_page_read_fraction"], "< 1.0"))
+    if bad:
+        for b in bad:
+            print(f"CHECK-FAILED: {b}", file=sys.stderr)
+        raise SystemExit(1)
+    print("# serve quant gates hold")
 
 
 if __name__ == "__main__":

@@ -106,7 +106,8 @@ def hybrid_decode_attention(q: jax.Array, k_cache: jax.Array,
                             scale: Optional[float] = None,
                             cache_positions=None,
                             slice_window: bool = False,
-                            return_state: bool = False):
+                            return_state: bool = False,
+                            return_slot_m: bool = False):
     """Single-token decode — ragged aware. q: (B, H, 1, D); caches:
     (B, Hkv, S, D); ``t``: scalar position (lockstep batch) OR a (B,)
     vector — one position per request, so a single call serves a
@@ -131,6 +132,12 @@ def hybrid_decode_attention(q: jax.Array, k_cache: jax.Array,
     yields the ``(0, NEG_INF, 0)`` identity (renorm.PartialState contract).
     Incompatible with ``slice_window`` (the sharded slab path passes
     ``cache_positions``, which already disables the slice).
+
+    ``return_slot_m=True`` appends ``slot_m`` (B, S) — each request's max
+    masked score against each cache slot (NEG_INF where masked), the raw
+    per-slot statistic the paged engine reduces to per-page maxima for
+    its stats-driven page-keep mask. Composes with ``return_state``;
+    incompatible with ``slice_window`` (slot order would be scrambled).
     """
     from repro.core import renorm
     from repro.core.scheduler import (STEP_GLOBAL, STEP_WINDOW,
@@ -163,6 +170,7 @@ def hybrid_decode_attention(q: jax.Array, k_cache: jax.Array,
         pos_k = (jnp.arange(S, dtype=jnp.int32) if cache_positions is None
                  else cache_positions.astype(jnp.int32))
         s = grouped(k_cache, v_cache, pos_k)          # (B, Hkv, rep, S)
+        slot_m = jnp.max(s, axis=(1, 2)) if return_slot_m else None
         m = jnp.max(s, axis=-1)
         # masked entries sit at NEG_INF: exp(NEG_INF - shift) underflows to
         # exactly 0, and an all-masked row keeps (0, NEG_INF, 0).
@@ -175,8 +183,18 @@ def hybrid_decode_attention(q: jax.Array, k_cache: jax.Array,
         # would diverge from the single-device round-once numerics
         acc = jnp.einsum("bgrs,bgsd->bgrd", p, v_cache.astype(p.dtype))
         out = acc / jnp.where(l == 0.0, 1.0, l)[..., None]
-        return (out.reshape(B, H, 1, D),
-                m.reshape(B, H, 1), l.reshape(B, H, 1))
+        res = (out.reshape(B, H, 1, D),
+               m.reshape(B, H, 1), l.reshape(B, H, 1))
+        return (*res, slot_m) if return_slot_m else res
+
+    if return_slot_m:
+        pos_k = (jnp.arange(S, dtype=jnp.int32) if cache_positions is None
+                 else cache_positions.astype(jnp.int32))
+        s = grouped(k_cache, v_cache, pos_k)
+        wts = jax.nn.softmax(s, axis=-1)
+        out = jnp.einsum("bgrs,bgsd->bgrd", wts, v_cache.astype(wts.dtype))
+        return (out.astype(q.dtype).reshape(B, H, 1, D),
+                jnp.max(s, axis=(1, 2)))
 
     if slice_window and cache_positions is None and a > -(1 << 29) \
             and not ragged_t:

@@ -498,7 +498,9 @@ def plan_backward(g, q, k, v, out_w, m, l, plan: ExecutionPlan, scale: float,
 def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
                      t: jax.Array, pattern: HybridSparsePattern, *,
                      scale: Optional[float] = None,
-                     cache_positions: Optional[jax.Array] = None) -> jax.Array:
+                     cache_positions: Optional[jax.Array] = None,
+                     k_scale: Optional[jax.Array] = None,
+                     v_scale: Optional[jax.Array] = None) -> jax.Array:
     """One-token decode against a KV cache (serve_step path) — RAGGED aware.
 
     q: (B, 1, D); caches: (B, S, D); ``t`` = current absolute position:
@@ -508,9 +510,21 @@ def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
     baseline cache); ring/paged caches pass their slot->position maps here
     and everything still works because masks are position-based
     (``scheduler.causal_step_mask``).
+
+    int8 caches pass per-slot dequant scales ``k_scale``/``v_scale``
+    ((S,) or (B, S) f32 — a paged caller expands its per-page scales
+    page->slots): slots are dequantized to ``q.dtype`` before the score
+    matmul, mirroring the in-kernel dequant of the Pallas paged path.
     """
     B, S, D = k_cache.shape
     scale = (D ** -0.5) if scale is None else scale
+    if k_scale is not None:
+        sk = jnp.broadcast_to(jnp.asarray(k_scale, jnp.float32), (B, S))
+        sv = jnp.broadcast_to(jnp.asarray(v_scale, jnp.float32), (B, S))
+        k_cache = (k_cache.astype(jnp.float32)
+                   * sk[..., None]).astype(q.dtype)
+        v_cache = (v_cache.astype(jnp.float32)
+                   * sv[..., None]).astype(q.dtype)
     pos_k = (jnp.arange(S, dtype=jnp.int32) if cache_positions is None
              else cache_positions.astype(jnp.int32))
     pos_k = jnp.broadcast_to(pos_k, (B, S))

@@ -14,7 +14,10 @@ kernel launch instead of a lockstep scalar ``t``. Two cache layouts:
   (:mod:`repro.serve.paged_cache`): the per-request **page table** is the
   second scalar-prefetch operand, and the BlockSpec index map chases it so
   each grid step DMAs exactly one physical page tile — no per-request
-  gather ever materializes in HBM.
+  gather ever materializes in HBM. int8 slabs additionally prefetch the
+  per-page f32 scales (operands 3/4) and dequantize each tile in VMEM;
+  ``return_page_stats`` emits per-(request, page) max masked scores for
+  the engine's stats-driven page-keep mask.
 
 Both kernels stream cache tiles through VMEM past the resident grouped
 query (GQA: rep = H/Hkv query rows share each KV head — no KV repeat), with
@@ -53,13 +56,17 @@ def _use_fallback(interpret: bool) -> bool:
 
 def _tile_update(s, steps, t, q, k, v, pos_k, out_ref, acc_ref, m_scr, l_scr,
                  *, pattern: HybridSparsePattern, scale: float,
-                 m_ref=None, l_ref=None):
+                 m_ref=None, l_ref=None, pm_ref=None):
     """Fold one cache tile into the online-softmax scratch; finalize on the
     last sequential step. q: (rep, hd); k/v: (Bs, hd); pos_k: (Bs,) int32;
     t: per-request scalar position. ``m_ref``/``l_ref`` (optional
     (1, 1, rep, LANES) out refs) additionally emit the row stats — the
     per-shard partial the sequence-parallel decode merge consumes; rows
-    that attended nothing finalize to the (0, NEG_INF, 0) identity."""
+    that attended nothing finalize to the (0, NEG_INF, 0) identity.
+    ``pm_ref`` (optional (1, 1, 1, LANES) out ref, one block per
+    sequential step) emits THIS tile's max masked score — the raw
+    material of the engine's page-sparsity statistics; an all-masked tile
+    emits NEG_INF."""
 
     @pl.when(s == 0)
     def _init():
@@ -83,6 +90,9 @@ def _tile_update(s, steps, t, q, k, v, pos_k, out_ref, acc_ref, m_scr, l_scr,
         mask = mask | (pos_k < g)
     mask = mask & (pos_k <= t)
     scores = jnp.where(mask[None, :], scores, NEG_INF)
+
+    if pm_ref is not None:
+        pm_ref[0, 0] = jnp.full((1, LANES), jnp.max(scores), jnp.float32)
 
     m_prev = m_scr[...][:, :1]
     m_new = jnp.maximum(m_prev, jnp.max(scores, axis=-1, keepdims=True))
@@ -115,26 +125,47 @@ def _ragged_kernel(t_ref, q_ref, k_ref, v_ref, pos_ref, out_ref,
                  pattern=pattern, scale=scale)
 
 
-def _paged_kernel(t_ref, pt_ref, q_ref, k_ref, v_ref, pos_ref, out_ref,
-                  acc_ref, m_scr, l_scr, *, pattern: HybridSparsePattern,
-                  steps: int, scale: float):
-    b = pl.program_id(0)
-    s = pl.program_id(2)
-    _tile_update(s, steps, t_ref[b], q_ref[0, 0], k_ref[0, :, 0],
-                 v_ref[0, :, 0], pos_ref[0, 0], out_ref, acc_ref, m_scr,
-                 l_scr, pattern=pattern, scale=scale)
+def _make_paged_kernel(*, pattern: HybridSparsePattern, steps: int,
+                       scale: float, npp: int, tpp: int, quant: bool,
+                       want_state: bool, want_pm: bool, compute_dtype):
+    """Paged-decode kernel for any combination of the static features:
+    ``quant`` dequantizes the int8 slab tile by its page's scalar-
+    prefetched scale (no fp slab ever exists in HBM), ``want_state``
+    emits the (m, l) row stats, ``want_pm`` emits the per-tile max
+    masked score. Refs arrive positionally (prefetch, ins, outs,
+    scratch) so the one body parses them by the same flags."""
 
+    def kern(*refs):
+        t_ref, pt_ref = refs[0], refs[1]
+        i = 2
+        if quant:
+            ks_ref, vs_ref = refs[2], refs[3]
+            i = 4
+        q_ref, k_ref, v_ref, pos_ref = refs[i:i + 4]
+        i += 4
+        out_ref = refs[i]
+        i += 1
+        m_ref = l_ref = pm_ref = None
+        if want_state:
+            m_ref, l_ref = refs[i], refs[i + 1]
+            i += 2
+        if want_pm:
+            pm_ref = refs[i]
+            i += 1
+        acc_ref, m_scr, l_scr = refs[i:i + 3]
+        b = pl.program_id(0)
+        s = pl.program_id(2)
+        k = k_ref[0, :, 0]
+        v = v_ref[0, :, 0]
+        if quant:
+            pg = pt_ref[b * npp + s // tpp]
+            k = (k.astype(jnp.float32) * ks_ref[pg]).astype(compute_dtype)
+            v = (v.astype(jnp.float32) * vs_ref[pg]).astype(compute_dtype)
+        _tile_update(s, steps, t_ref[b], q_ref[0, 0], k, v, pos_ref[0, 0],
+                     out_ref, acc_ref, m_scr, l_scr, pattern=pattern,
+                     scale=scale, m_ref=m_ref, l_ref=l_ref, pm_ref=pm_ref)
 
-def _paged_state_kernel(t_ref, pt_ref, q_ref, k_ref, v_ref, pos_ref,
-                        out_ref, m_ref, l_ref, acc_ref, m_scr, l_scr, *,
-                        pattern: HybridSparsePattern, steps: int,
-                        scale: float):
-    b = pl.program_id(0)
-    s = pl.program_id(2)
-    _tile_update(s, steps, t_ref[b], q_ref[0, 0], k_ref[0, :, 0],
-                 v_ref[0, :, 0], pos_ref[0, 0], out_ref, acc_ref, m_scr,
-                 l_scr, pattern=pattern, scale=scale, m_ref=m_ref,
-                 l_ref=l_ref)
+    return kern
 
 
 @functools.partial(jax.jit, static_argnames=("pattern", "block_s", "scale",
@@ -202,14 +233,18 @@ def salo_decode(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
 
 
 @functools.partial(jax.jit, static_argnames=("pattern", "block_s", "scale",
-                                             "interpret", "return_state"))
+                                             "interpret", "return_state",
+                                             "return_page_stats"))
 def salo_paged_decode(q: jax.Array, k_slab: jax.Array, v_slab: jax.Array,
                       page_tables: jax.Array, positions: jax.Array, t, *,
                       pattern: HybridSparsePattern,
                       block_s: Optional[int] = None,
                       scale: Optional[float] = None,
                       interpret: bool = False,
-                      return_state: bool = False):
+                      return_state: bool = False,
+                      k_scale: Optional[jax.Array] = None,
+                      v_scale: Optional[jax.Array] = None,
+                      return_page_stats: bool = False):
     """Ragged decode straight off the pooled paged slab.
 
     q: (B, H, 1, hd); slabs: (n_pages, page, Hkv, hd) shared by ALL
@@ -219,6 +254,17 @@ def salo_paged_decode(q: jax.Array, k_slab: jax.Array, v_slab: jax.Array,
     page table is scalar-prefetched, so the BlockSpec index map resolves
     logical tile -> physical page before each DMA — the kernel never sees a
     gathered copy of the cache. Returns (B, H, 1, hd).
+
+    **int8 slab**: pass the layer's per-page ``k_scale``/``v_scale``
+    (n_pages,) f32 — they ride as scalar-prefetch operands 3/4 next to
+    the page table and each tile is dequantized in VMEM right after its
+    DMA (the fp cache never materializes anywhere).
+
+    ``return_page_stats=True`` additionally emits ``page_m`` (B, npp): the
+    max masked score each request produced against each of its logical
+    pages this step (NEG_INF for fully-masked pages) — the statistic the
+    engine's Salca-style page-keep mask accumulates. Composes with
+    ``return_state``; outputs are ``out[, m, l][, page_m]`` in that order.
 
     Under sequence-parallel serving each shard runs this launch over its
     OWN page tables / slot positions (its slice of the paged slab) and
@@ -231,17 +277,25 @@ def salo_paged_decode(q: jax.Array, k_slab: jax.Array, v_slab: jax.Array,
     npp = page_tables.shape[1]
     S_req = npp * page
     assert positions.shape == (B, S_req), (positions.shape, B, S_req)
+    quant = k_scale is not None
     rep = H // Hkv
     scale_ = (hd ** -0.5) if scale is None else scale
     t_arr = jnp.broadcast_to(jnp.asarray(t, jnp.int32), (B,))
     if _use_fallback(interpret):
         from repro.core.attention import hybrid_decode_attention
         from repro.serve.paged_cache import gather_view
-        k_req, v_req = gather_view(k_slab, v_slab, page_tables)
-        return hybrid_decode_attention(
+        k_req, v_req = gather_view(
+            k_slab, v_slab, page_tables,
+            *((k_scale, v_scale, q.dtype) if quant else ()))
+        res = hybrid_decode_attention(
             q, k_req.transpose(0, 2, 1, 3), v_req.transpose(0, 2, 1, 3),
             t_arr, pattern, scale=scale_, cache_positions=positions,
-            return_state=return_state)
+            return_state=return_state, return_slot_m=return_page_stats)
+        if not return_page_stats:
+            return res
+        parts, slot_m = (res[:-1], res[-1])
+        page_m = slot_m.reshape(B, npp, page).max(axis=-1)
+        return (*parts, page_m) if return_state else (parts[0], page_m)
     bs = page if block_s is None else block_s
     assert page % bs == 0, f"block_s {bs} must divide page {page}"
     tpp = page // bs                       # tiles per page
@@ -249,56 +303,76 @@ def salo_paged_decode(q: jax.Array, k_slab: jax.Array, v_slab: jax.Array,
     qg = q.reshape(B, Hkv, rep, hd)
     pos3d = positions.astype(jnp.int32).reshape(B, steps, bs)
     pt_flat = page_tables.astype(jnp.int32).reshape(-1)
+    n_pref = 4 if quant else 2
 
-    def kv_idx(b, h, s, t_ref, pt_ref):
+    def kv_idx(b, h, s, t_ref, pt_ref, *_):
         return (pt_ref[b * npp + s // tpp], s % tpp, h, 0)
 
-    kern = functools.partial(
-        _paged_state_kernel if return_state else _paged_kernel,
-        pattern=pattern, steps=steps, scale=scale_)
-    out_specs = pl.BlockSpec((1, 1, rep, hd),
-                             lambda b, h, s, t, pt: (b, h, 0, 0))
+    kern = _make_paged_kernel(pattern=pattern, steps=steps, scale=scale_,
+                              npp=npp, tpp=tpp, quant=quant,
+                              want_state=return_state,
+                              want_pm=return_page_stats,
+                              compute_dtype=q.dtype)
+    out_specs = [pl.BlockSpec((1, 1, rep, hd),
+                              lambda b, h, s, *_: (b, h, 0, 0))]
     # state mode emits the out partial in f32: the cross-shard merge
     # rounds to q.dtype once, after combining (per-shard rounding would
     # diverge from the single-device round-once numerics)
-    out_shape = jax.ShapeDtypeStruct(
-        (B, Hkv, rep, hd), jnp.float32 if return_state else q.dtype)
+    out_shape = [jax.ShapeDtypeStruct(
+        (B, Hkv, rep, hd), jnp.float32 if return_state else q.dtype)]
     if return_state:
         # m/l ride full LANES-wide blocks (every lane equal) so the output
         # keeps the TPU-native tiling; callers read lane 0.
         stat_spec = pl.BlockSpec((1, 1, rep, LANES),
-                                 lambda b, h, s, t, pt: (b, h, 0, 0))
+                                 lambda b, h, s, *_: (b, h, 0, 0))
         stat_shape = jax.ShapeDtypeStruct((B, Hkv, rep, LANES), jnp.float32)
-        out_specs = (out_specs, stat_spec, stat_spec)
-        out_shape = (out_shape, stat_shape, stat_shape)
+        out_specs += [stat_spec, stat_spec]
+        out_shape += [stat_shape, stat_shape]
+    if return_page_stats:
+        # one LANES-wide block per sequential step (lanes equal); the host
+        # reduces tiles->pages and KV heads below.
+        out_specs.append(pl.BlockSpec((1, 1, 1, LANES),
+                                      lambda b, h, s, *_: (b, h, s, 0)))
+        out_shape.append(
+            jax.ShapeDtypeStruct((B, Hkv, steps, LANES), jnp.float32))
+    single = len(out_specs) == 1
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,                     # t vector, page tables
+        num_scalar_prefetch=n_pref,   # t, page tables[, k_scale, v_scale]
         grid=(B, Hkv, steps),
         in_specs=[
             pl.BlockSpec((1, 1, rep, hd),
-                         lambda b, h, s, t, pt: (b, h, 0, 0)),
+                         lambda b, h, s, *_: (b, h, 0, 0)),
             pl.BlockSpec((1, bs, 1, hd), kv_idx),              # k slab
             pl.BlockSpec((1, bs, 1, hd), kv_idx),              # v slab
-            pl.BlockSpec((1, 1, bs), lambda b, h, s, t, pt: (b, s, 0)),
+            pl.BlockSpec((1, 1, bs), lambda b, h, s, *_: (b, s, 0)),
         ],
-        out_specs=out_specs,
+        out_specs=out_specs[0] if single else tuple(out_specs),
         scratch_shapes=[
             pltpu.VMEM((rep, hd), jnp.float32),
             pltpu.VMEM((rep, LANES), jnp.float32),
             pltpu.VMEM((rep, LANES), jnp.float32),
         ],
     )
+    pref = (t_arr, pt_flat) + (
+        (k_scale.astype(jnp.float32), v_scale.astype(jnp.float32))
+        if quant else ())
     res = pl.pallas_call(
         kern,
         grid_spec=grid_spec,
-        out_shape=out_shape,
+        out_shape=out_shape[0] if single else tuple(out_shape),
         compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
         name="salo_paged_decode",
-    )(t_arr, pt_flat, qg, k_slab, v_slab, pos3d)
+    )(*pref, qg, k_slab, v_slab, pos3d)
+    res = (res,) if single else list(res)
+    out = res[0].reshape(B, H, 1, hd)
+    rest = []
     if return_state:
-        out, m, l = res
-        return (out.reshape(B, H, 1, hd), m[..., 0].reshape(B, H, 1),
-                l[..., 0].reshape(B, H, 1))
-    return res.reshape(B, H, 1, hd)
+        m, l = res[1], res[2]
+        rest += [m[..., 0].reshape(B, H, 1), l[..., 0].reshape(B, H, 1)]
+    if return_page_stats:
+        pm = res[-1][..., 0]                       # (B, Hkv, steps)
+        page_m = pm.max(axis=1).reshape(B, npp, tpp).max(axis=-1)
+        rest.append(page_m)
+    return (out, *rest) if rest else out

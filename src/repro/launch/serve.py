@@ -54,6 +54,21 @@ def main(argv=None):
     ap.add_argument("--seq-shards", type=int, default=1,
                     help="sequence-parallel serving shards (continuous "
                          "engine; needs a 'seq' mesh of that many devices)")
+    ap.add_argument("--kv-dtype", choices=("compute", "int8"),
+                    default="compute",
+                    help="paged-slab storage dtype (continuous engine): "
+                         "'int8' stores K/V quantized per (layer, page) "
+                         "with f32 scales, dequantized in-kernel")
+    ap.add_argument("--page-sparsity-threshold", type=float, default=None,
+                    help="continuous engine: skip reading pages whose "
+                         "historical max attention score (log-space, "
+                         "relative to the row max) fell below this; sink "
+                         "and write pages are always read. Unset = dense "
+                         "reads; -inf = track stats but keep everything")
+    ap.add_argument("--page-stat-decay", type=float, default=0.0,
+                    help="per-step decay of the per-page score history; "
+                         "must be > 0 for --page-sparsity-threshold to "
+                         "ever skip a page")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -83,7 +98,9 @@ def main(argv=None):
         eng = ContinuousEngine(model, ContinuousConfig(
             n_pages=1 + max_batch * lay.pages_per_shard, page=args.page,
             chunk=args.chunk, max_batch=max_batch,
-            seq_shards=args.seq_shards), mesh=mesh)
+            seq_shards=args.seq_shards, kv_dtype=args.kv_dtype,
+            page_sparsity_threshold=args.page_sparsity_threshold,
+            page_stat_decay=args.page_stat_decay), mesh=mesh)
         lens = _ragged_lengths(args.prompt_len, args.batch, rng)
         rids = [eng.submit(rng.integers(0, cfg.vocab_size, (L,)),
                            args.new_tokens) for L in lens]
@@ -93,7 +110,9 @@ def main(argv=None):
         total_new = args.batch * args.new_tokens
         print(f"# arch={cfg.name} engine=continuous batch={args.batch} "
               f"prompts={lens} new={args.new_tokens} chunk={args.chunk} "
-              f"page={args.page} seq_shards={args.seq_shards}")
+              f"page={args.page} seq_shards={args.seq_shards} "
+              f"kv_dtype={args.kv_dtype} "
+              f"page_thr={args.page_sparsity_threshold}")
         print(f"# {dt:.2f}s total, {total_new/dt:.1f} tok/s "
               f"(includes compile); counters={eng.counters}")
         for rid in rids[:2]:

@@ -246,39 +246,75 @@ def attn_chunk_prefill(p, x_chunk, ctx_k, ctx_v, ctx_pos, pos_q, kv_blocks,
 def attn_decode_paged(p, x_t, k_slab, v_slab, page_tables, slot_pos, t_vec,
                       phys_w, off_w, cfg: ModelConfig,
                       pattern: HybridSparsePattern, impl: str = "xla",
-                      axis=None):
+                      axis=None, k_scale=None, v_scale=None,
+                      want_page_stats: bool = False):
     """Ragged one-token decode against ONE layer's pooled paged slab.
 
     x_t: (R, 1, d) — one token per engine row; k_slab/v_slab:
     (n_pages, page, Hkv, hd); page_tables: (R, npp); slot_pos: (R, S_req)
     live positions (already updated for this step's writes); t_vec: (R,)
     per-request positions; phys_w/off_w: (R,) slab write targets (null page
-    for inactive rows). Returns (out, k_slab, v_slab).
+    for inactive rows). Returns
+    ``(out, k_slab, v_slab, k_scale, v_scale, page_m)``.
+
+    ``k_scale``/``v_scale``: the layer's per-page (n_pages,) f32 dequant
+    scales — present iff the slab is int8. The fresh token KV is
+    quantized into its page (:func:`~repro.serve.paged_cache
+    .quant_slab_write`, monotone scale growth) and reads dequantize
+    per page — in-kernel for the Pallas impls, via the dequantizing
+    ``gather_view`` for the XLA twin. Returned ``k_scale``/``v_scale``
+    are the updated vectors (``None`` for fp slabs).
+
+    ``want_page_stats=True`` makes ``page_m`` (R, npp) the max masked
+    score this request produced against each of its logical pages
+    (NEG_INF for fully-masked pages) — the engine's page-sparsity
+    statistic; otherwise ``page_m`` is ``None``.
 
     ``axis``: sequence-parallel serving — slab/page_tables/slot_pos are
     this shard's slice (npp = pages_per_shard; non-owned writes already
     routed to the null page via phys_w), so the decode launch covers only
     the owned slots and the (out, m, l) partial is merged across the mesh
     axis (one ragged launch per shard, masked-psum combine)."""
-    from repro.serve.paged_cache import gather_view, slab_write
+    from repro.serve.paged_cache import (gather_view, quant_slab_write,
+                                         slab_write)
 
     R = x_t.shape[0]
+    quant = k_scale is not None
     q, k, v = attn_qkv(p, x_t, cfg, t_vec[:, None])
-    k_slab, v_slab = slab_write(k_slab, v_slab, phys_w, off_w,
-                                k[:, 0], v[:, 0])
+    if quant:
+        k_slab, v_slab, k_scale, v_scale = quant_slab_write(
+            k_slab, v_slab, k_scale, v_scale, phys_w, off_w, k[:, 0], v[:, 0])
+    else:
+        k_slab, v_slab = slab_write(k_slab, v_slab, phys_w, off_w,
+                                    k[:, 0], v[:, 0])
     qt = q.transpose(0, 2, 1, 3)                       # (R, H, 1, hd)
     state = axis is not None
+    page_m = None
     if impl in ("pallas", "pallas_interpret"):
         from repro.kernels.salo_decode import salo_paged_decode
         res = salo_paged_decode(qt, k_slab, v_slab, page_tables, slot_pos,
                                 t_vec, pattern=pattern,
                                 interpret=(impl == "pallas_interpret"),
-                                return_state=state)
+                                return_state=state, k_scale=k_scale,
+                                v_scale=v_scale,
+                                return_page_stats=want_page_stats)
+        if want_page_stats:
+            res, page_m = res[:-1], res[-1]
+            res = res if state else res[0]
     else:
-        k_req, v_req = gather_view(k_slab, v_slab, page_tables)
+        k_req, v_req = gather_view(
+            k_slab, v_slab, page_tables,
+            *((k_scale, v_scale, x_t.dtype) if quant else ()))
         res = hybrid_decode_attention(
             qt, k_req.transpose(0, 2, 1, 3), v_req.transpose(0, 2, 1, 3),
-            t_vec, pattern, cache_positions=slot_pos, return_state=state)
+            t_vec, pattern, cache_positions=slot_pos, return_state=state,
+            return_slot_m=want_page_stats)
+        if want_page_stats:
+            res, slot_m = (res[:-1], res[-1])
+            res = res if state else res[0]
+            page = k_slab.shape[1]
+            npp = page_tables.shape[1]
+            page_m = slot_m.reshape(R, npp, page).max(axis=-1)
     if state:
         from repro.dist.sharded_plan import masked_psum_merge
         out, m, l = res
@@ -287,7 +323,8 @@ def attn_decode_paged(p, x_t, k_slab, v_slab, page_tables, slot_pos, t_vec,
     else:
         out = res
     out = out.transpose(0, 2, 1, 3).reshape(R, 1, cfg.n_heads * cfg.hd)
-    return out @ p["wo"].astype(x_t.dtype), k_slab, v_slab
+    return (out @ p["wo"].astype(x_t.dtype), k_slab, v_slab,
+            k_scale, v_scale, page_m)
 
 
 # ------------------------------ embedding -------------------------------- #

@@ -245,13 +245,18 @@ def block_chunk_prefill(p, x, ctx_k, ctx_v, ctx_pos, pos_q, kv_blocks,
 
 def block_decode_paged(p, x_t, k_slab, v_slab, page_tables, slot_pos, t_vec,
                        phys_w, off_w, cfg: ModelConfig, kind: str, pattern,
-                       impl: str, axis=None):
-    """Ragged one-token decode through one block against the paged slab."""
-    h, k_slab, v_slab = L.attn_decode_paged(
+                       impl: str, axis=None, k_scale=None, v_scale=None,
+                       want_page_stats: bool = False):
+    """Ragged one-token decode through one block against the paged slab.
+    Returns (x, k_slab, v_slab, k_scale, v_scale, page_m) — scales/stats
+    ``None`` unless the slab is int8 / stats were requested."""
+    h, k_slab, v_slab, k_scale, v_scale, page_m = L.attn_decode_paged(
         p["attn"], L.rmsnorm(p["ln1"], x_t, cfg.norm_eps), k_slab, v_slab,
         page_tables, slot_pos, t_vec, phys_w, off_w, cfg, pattern, impl,
-        axis=axis)
-    return _ffn_residual(p, x_t + h, cfg, kind), k_slab, v_slab
+        axis=axis, k_scale=k_scale, v_scale=v_scale,
+        want_page_stats=want_page_stats)
+    return (_ffn_residual(p, x_t + h, cfg, kind), k_slab, v_slab,
+            k_scale, v_scale, page_m)
 
 
 def segment_chunk_prefill(params, slab, x, page_table, ctx_pos, pos_q,
@@ -270,48 +275,87 @@ def segment_chunk_prefill(params, slab, x, page_table, ctx_pos, pos_q,
     chunk activations and fresh chunk KV are replicated, and each layer's
     attention merges its partial across the mesh axis (one cross-shard
     combine per layer inside the scan).
+
+    int8 slabs (``slab.quantized``) thread each layer's per-page scales
+    through the scan: the ctx view is dequantized at the gather and the
+    fresh chunk KV is quantized at the write-back (monotone per-page
+    scale growth).
     """
-    from repro.serve.paged_cache import PagedSlab
+    from repro.serve.paged_cache import (PagedSlab, gather_view,
+                                         quant_slab_write)
 
     npp = page_table.shape[0]
     page = slab.k.shape[2]
+    quant = slab.quantized
 
     def body(carry, inp):
         x = carry
-        layer_params, (k_l, v_l) = inp
-        Hkv, hd = k_l.shape[-2], k_l.shape[-1]
-        ctx_k = k_l[page_table].reshape(1, npp * page, Hkv, hd)
-        ctx_v = v_l[page_table].reshape(1, npp * page, Hkv, hd)
+        if quant:
+            layer_params, (k_l, v_l, ks_l, vs_l) = inp
+            ctx_k, ctx_v = gather_view(k_l, v_l, page_table[None],
+                                       ks_l, vs_l, x.dtype)
+        else:
+            layer_params, (k_l, v_l) = inp
+            Hkv, hd = k_l.shape[-2], k_l.shape[-1]
+            ctx_k = k_l[page_table].reshape(1, npp * page, Hkv, hd)
+            ctx_v = v_l[page_table].reshape(1, npp * page, Hkv, hd)
         x, k_c, v_c = block_chunk_prefill(
             layer_params, x, ctx_k, ctx_v, ctx_pos, pos_q, kv_blocks,
             flags, cfg, kind, pattern, axis=axis)
+        if quant:
+            k_l, v_l, ks_l, vs_l = quant_slab_write(
+                k_l, v_l, ks_l, vs_l, phys_w, off_w, k_c[0], v_c[0])
+            return x, (k_l, v_l, ks_l, vs_l)
         k_l = k_l.at[phys_w, off_w].set(k_c[0].astype(k_l.dtype))
         v_l = v_l.at[phys_w, off_w].set(v_c[0].astype(v_l.dtype))
         return x, (k_l, v_l)
 
-    x, (k_new, v_new) = jax.lax.scan(body, x, (params, (slab.k, slab.v)))
-    return x, PagedSlab(k=k_new, v=v_new)
+    xs = ((params, (slab.k, slab.v, slab.k_scale, slab.v_scale)) if quant
+          else (params, (slab.k, slab.v)))
+    x, new = jax.lax.scan(body, x, xs)
+    return x, PagedSlab(*new)
 
 
 def segment_decode_paged(params, slab, x_t, page_tables, slot_pos, t_vec,
                          phys_w, off_w, cfg: ModelConfig, kind: str,
-                         pattern, impl: str, axis=None):
+                         pattern, impl: str, axis=None,
+                         want_page_stats: bool = False):
     """Scan one stacked segment for one ragged decode step. Returns
-    (x_t, new slab). ``axis``: sequence-parallel serving (per-shard slab
-    slice + cross-shard partial merge per layer, see
+    (x_t, new slab) — plus ``page_m`` (R, npp), the max masked score over
+    the segment's layers per (request, logical page), when
+    ``want_page_stats`` (the engine's page-sparsity statistic). int8
+    slabs thread per-layer scales through the scan exactly like
+    :func:`segment_chunk_prefill`. ``axis``: sequence-parallel serving
+    (per-shard slab slice + cross-shard partial merge per layer, see
     :func:`repro.models.layers.attn_decode_paged`)."""
+    from repro.core.renorm import NEG_INF
     from repro.serve.paged_cache import PagedSlab
 
-    def body(carry, inp):
-        x_t = carry
-        layer_params, (k_l, v_l) = inp
-        x_t, k_l, v_l = block_decode_paged(
-            layer_params, x_t, k_l, v_l, page_tables, slot_pos, t_vec,
-            phys_w, off_w, cfg, kind, pattern, impl, axis=axis)
-        return x_t, (k_l, v_l)
+    quant = slab.quantized
 
-    x_t, (k_new, v_new) = jax.lax.scan(body, x_t, (params, (slab.k, slab.v)))
-    return x_t, PagedSlab(k=k_new, v=v_new)
+    def body(carry, inp):
+        x_t, pm_acc = carry
+        if quant:
+            layer_params, (k_l, v_l, ks_l, vs_l) = inp
+        else:
+            layer_params, (k_l, v_l) = inp
+            ks_l = vs_l = None
+        x_t, k_l, v_l, ks_l, vs_l, pm = block_decode_paged(
+            layer_params, x_t, k_l, v_l, page_tables, slot_pos, t_vec,
+            phys_w, off_w, cfg, kind, pattern, impl, axis=axis,
+            k_scale=ks_l, v_scale=vs_l, want_page_stats=want_page_stats)
+        if want_page_stats:
+            pm_acc = jnp.maximum(pm_acc, pm)
+        return ((x_t, pm_acc),
+                (k_l, v_l, ks_l, vs_l) if quant else (k_l, v_l))
+
+    R, npp = page_tables.shape
+    pm0 = jnp.full((R, npp), NEG_INF, jnp.float32)
+    xs = ((params, (slab.k, slab.v, slab.k_scale, slab.v_scale)) if quant
+          else (params, (slab.k, slab.v)))
+    (x_t, pm), new = jax.lax.scan(body, (x_t, pm0), xs)
+    slab = PagedSlab(*new)
+    return (x_t, slab, pm) if want_page_stats else (x_t, slab)
 
 
 # ========================= programs & segments ========================== #

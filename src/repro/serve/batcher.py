@@ -56,6 +56,13 @@ class Request:
 class Batcher:
     """Admission, per-step batch assembly, completion/eviction."""
 
+    # Completion callback, set by the engine: called as
+    # ``on_finish(row, pages)`` right after a request's pages return to
+    # the pool and before the row is cleared — the engine uses it to
+    # retire per-row page statistics and zero recycled pages' int8
+    # scales so a reused page starts from a fresh quantization grid.
+    on_finish = None
+
     def __init__(self, layout: PagedLayout, n_pages: int, max_batch: int):
         # One allocator per sequence shard (layout.shards == 1 -> exactly
         # the single-pool engine): every request takes pages_per_shard
@@ -131,6 +138,8 @@ class Batcher:
         pps = self.layout.pages_per_shard
         for s, a in enumerate(self.allocs):
             a.release(req.pages[s * pps: (s + 1) * pps])
+        if self.on_finish is not None:
+            self.on_finish(req.row, req.pages)
         req.pages = None
         self.rows[req.row] = None
         req.row = -1

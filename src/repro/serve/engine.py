@@ -106,13 +106,31 @@ class ContinuousConfig:
     striping — see :class:`repro.serve.paged_cache.PagedLayout`), chunked
     prefill and ragged decode run one launch per shard over per-shard step
     tables / page tables / slot maps, and per-layer partials combine by a
-    masked psum. Greedy output stays token-exact vs ``seq_shards=1``."""
+    masked psum. Greedy output stays token-exact vs ``seq_shards=1``.
+
+    ``kv_dtype``: ``"compute"`` stores the slab at the model's compute
+    dtype; ``"int8"`` stores it quantized with per-(layer, page) scales
+    (paper §6.4 deployment numerics — ~4x less resident KV HBM).
+
+    ``page_sparsity_threshold``: ``None`` disables the stats machinery
+    entirely (dense reads, no per-page score tracking). A float enables
+    Salca-style page-skip: each decode step every request's per-page max
+    attention score (log-space, relative to its row max) updates a
+    decayed historical max, and pages whose history falls below the
+    threshold are routed to the null page for the next launch — sink
+    pages and the current write page are always kept. ``-inf`` keeps the
+    machinery on but skips nothing (token-identical to ``None``).
+    ``page_stat_decay`` is the per-step additive log-space decay
+    (``hist = max(rel_score, hist - decay)``); 0 = pure historical max."""
     n_pages: int
     page: int = 8
     chunk: int = 16
     max_batch: int = 4
     decode_impl: str = "xla"
     seq_shards: int = 1
+    kv_dtype: str = "compute"
+    page_sparsity_threshold: Optional[float] = None
+    page_stat_decay: float = 0.0
 
 
 class ContinuousEngine:
@@ -148,12 +166,18 @@ class ContinuousEngine:
                 raise ValueError(
                     f"seq_shards={self.n_shards} needs a mesh with a "
                     f"{seq_axis!r} axis of that size, got {mesh}")
+        if ccfg.kv_dtype not in ("compute", "int8"):
+            raise ValueError(f"kv_dtype must be 'compute' or 'int8', got "
+                             f"{ccfg.kv_dtype!r}")
+        self.quantized = ccfg.kv_dtype == "int8"
+        self.track_stats = ccfg.page_sparsity_threshold is not None
         self.pattern = L.salo_pattern(cfg, causal=True)
         if self.pattern.is_2d or not self.pattern.causal:
             raise NotImplementedError("continuous serving: causal 1-D only")
         self.layout = layout_for_pattern(self.pattern, ccfg.page,
                                          shards=self.n_shards)
         self.batcher = Batcher(self.layout, ccfg.n_pages, ccfg.max_batch)
+        self.batcher.on_finish = self._release_hook
 
         lay = self.layout
         self.chunk_pad = -(-max(ccfg.chunk, 1) // ccfg.page) * ccfg.page
@@ -169,8 +193,14 @@ class ContinuousEngine:
         self.slabs = {
             f"seg{i}_{kind}": slab_init(n, ccfg.n_pages, ccfg.page,
                                         cfg.n_kv_heads, cfg.hd, dtype,
-                                        lead=shard_dims)
+                                        lead=shard_dims,
+                                        quantized=self.quantized)
             for i, (kind, n) in enumerate(model.program)}
+        # Per-(request row, logical page) decayed historical max score
+        # (log-space, relative to the row max). 0 = "hot" — fresh pages
+        # start kept; fully-masked/skipped pages only ever decay.
+        self.page_hist = np.zeros(
+            (ccfg.max_batch, self.layout.pages_per_req), np.float64)
         from repro.core.scheduler import PAD_SENTINEL
         if self.n_shards > 1:
             self.slot_pos = jnp.full(
@@ -183,7 +213,8 @@ class ContinuousEngine:
         self.page_tables = np.zeros((ccfg.max_batch, lay.pages_per_req),
                                     np.int32)
         self.counters = {"prefill_launches": 0, "decode_launches": 0,
-                         "prefill_tokens": 0, "decode_tokens": 0}
+                         "prefill_tokens": 0, "decode_tokens": 0,
+                         "decode_pages_read": 0, "decode_pages_total": 0}
         if self.n_shards > 1:
             self._chunk_jit = jax.jit(self._chunk_sharded)
             self._decode_jit = jax.jit(self._decode_sharded)
@@ -240,17 +271,29 @@ class ContinuousEngine:
                      t_vec, phys_w, off_w, axis=None):
         """One ragged decode step for the WHOLE cohort, write targets
         already resolved (null page for dropped writes). Returns
-        (logits (R, V), new slabs)."""
+        (logits (R, V), new slabs, page_m) — ``page_m`` (R, npp), the max
+        per-(request, page) score over ALL layers of ALL segments when
+        page stats are tracked, else None."""
         from repro.models import transformer as T
 
         cfg = self.model.cfg
         x = self.model._embed_inputs(params, {"tokens": tokens[:, None]})
-        logits, new_slabs = self._run_lm(
-            params, slabs, x,
-            lambda kind, p, s, x: T.segment_decode_paged(
+        pms = []
+
+        def seg_step(kind, p, s, x):
+            res = T.segment_decode_paged(
                 p, s, x, page_tables, slot_pos, t_vec, phys_w, off_w, cfg,
-                kind, self.pattern, self.ccfg.decode_impl, axis=axis))
-        return logits[:, 0, :], new_slabs
+                kind, self.pattern, self.ccfg.decode_impl, axis=axis,
+                want_page_stats=self.track_stats)
+            if self.track_stats:
+                x, new_slab, pm = res
+                pms.append(pm)
+                return x, new_slab
+            return res
+
+        logits, new_slabs = self._run_lm(params, slabs, x, seg_step)
+        page_m = jnp.max(jnp.stack(pms), axis=0) if pms else None
+        return logits[:, 0, :], new_slabs, page_m
 
     def _chunk_fn(self, params, slabs, page_table, ctx_pos, pos_q, tokens,
                   kv_blocks, flags, phys_w, off_w):
@@ -258,9 +301,17 @@ class ContinuousEngine:
                                 tokens, kv_blocks, flags, phys_w, off_w)
 
     def _decode_fn(self, params, slabs, page_tables, slot_pos, tokens,
-                   t_vec, active):
+                   t_vec, active, page_keep=None):
         """Every in-flight request advances one token at its own position.
-        Inactive rows write to the null page; their logits are discarded."""
+        Inactive rows write to the null page; their logits are discarded.
+
+        ``page_keep`` (R, npp) bool (page-sparsity mode only): pages the
+        stats history says to read this step. Dropped pages are routed to
+        the null page AND their slots' read positions masked to PAD — the
+        persisted ``slot_pos``/page tables are untouched, so a page that
+        would come back above threshold later would simply be read again."""
+        from repro.core.scheduler import PAD_SENTINEL
+
         R = tokens.shape[0]
         lay = self.layout
         slot = lay.slot(t_vec)
@@ -269,9 +320,15 @@ class ContinuousEngine:
         rows = jnp.arange(R)
         slot_pos = slot_pos.at[rows, slot].set(
             jnp.where(active, t_vec, slot_pos[rows, slot]))
-        logits, new_slabs = self._decode_core(
-            params, slabs, jnp.asarray(page_tables), slot_pos, tokens,
-            t_vec, phys_w, off_w)
+        pt_read, pos_read = jnp.asarray(page_tables), slot_pos
+        if page_keep is not None:
+            pt_read = jnp.where(page_keep, pt_read, 0)
+            pos_read = jnp.where(jnp.repeat(page_keep, lay.page, axis=1),
+                                 slot_pos, PAD_SENTINEL)
+        logits, new_slabs, page_m = self._decode_core(
+            params, slabs, pt_read, pos_read, tokens, t_vec, phys_w, off_w)
+        if self.track_stats:
+            return logits, new_slabs, slot_pos, page_m
         return logits, new_slabs, slot_pos
 
     # --------------------- sharded (seq-parallel) steps ----------------- #
@@ -308,23 +365,29 @@ class ContinuousEngine:
                   phys_w, off_w, pos_q, tokens)
 
     def _decode_sharded(self, params, slabs, page_tables, slot_pos, tokens,
-                        t_vec, active):
+                        t_vec, active, page_keep=None):
         """One ragged decode step under sequence parallelism: each shard
         attends its owned slots (per-shard page tables + slot map), the
         new KV is written only by the written slot's owner, and per-layer
         (out, m, l) partials combine by masked psum — the sharded decode
         slot map. ``page_tables`` (S, R, npp_s), ``slot_pos`` (S, R, S_s);
-        tokens/t_vec/active replicated."""
+        tokens/t_vec/active replicated. ``page_keep`` (S, R, npp_s) —
+        the host-built keep mask striped like the page tables; each shard
+        masks its own reads (writes are never masked). Page stats come
+        back shard-stacked (S, R, npp_s); the host re-assembles the
+        logical (R, npp) view."""
         from jax.sharding import PartitionSpec as P
 
         from repro.compat import shard_map
+        from repro.core.scheduler import PAD_SENTINEL
 
         ax, lay = self.seq_axis, self.layout
         R = tokens.shape[0]
         page = self.ccfg.page
+        sparse = page_keep is not None
 
         def local(params, slabs, page_tables, slot_pos, tokens, t_vec,
-                  active):
+                  active, *rest):
             slabs = jax.tree.map(lambda a: a[0], slabs)
             page_tables, slot_pos = page_tables[0], slot_pos[0]
             idx = jax.lax.axis_index(ax)
@@ -338,28 +401,63 @@ class ContinuousEngine:
             rows = jnp.arange(R)
             slot_pos = slot_pos.at[rows, local_slot].set(
                 jnp.where(keep, t_vec, slot_pos[rows, local_slot]))
-            logits, new_slabs = self._decode_core(
-                params, slabs, page_tables, slot_pos, tokens, t_vec, phys,
+            pt_read, pos_read = page_tables, slot_pos
+            if sparse:
+                pk = rest[0][0]                        # (R, npp_s)
+                pt_read = jnp.where(pk, pt_read, 0)
+                pos_read = jnp.where(jnp.repeat(pk, page, axis=1),
+                                     slot_pos, PAD_SENTINEL)
+            logits, new_slabs, page_m = self._decode_core(
+                params, slabs, pt_read, pos_read, tokens, t_vec, phys,
                 off, axis=ax)
-            return (logits, jax.tree.map(lambda a: a[None], new_slabs),
-                    slot_pos[None])
+            out = (logits, jax.tree.map(lambda a: a[None], new_slabs),
+                   slot_pos[None])
+            return out + ((page_m[None],) if self.track_stats else ())
 
-        fn = shard_map(
-            local, mesh=self.mesh,
-            in_specs=(P(), P(ax), P(ax), P(ax), P(), P(), P()),
-            out_specs=(P(), P(ax), P(ax)), check_vma=False)
-        return fn(params, slabs, page_tables, slot_pos, tokens, t_vec,
-                  active)
+        specs = [P(), P(ax), P(ax), P(ax), P(), P(), P()]
+        args = [params, slabs, page_tables, slot_pos, tokens, t_vec, active]
+        if sparse:
+            specs.append(P(ax))
+            args.append(page_keep)
+        out_specs = (P(), P(ax), P(ax)) + ((P(ax),) if self.track_stats
+                                           else ())
+        fn = shard_map(local, mesh=self.mesh, in_specs=tuple(specs),
+                       out_specs=out_specs, check_vma=False)
+        return fn(*args)
 
     # --------------------------- host driving -------------------------- #
     def submit(self, prompt, max_new: int) -> int:
         return self.batcher.submit(prompt, max_new)
+
+    def _release_hook(self, row: int, pages: np.ndarray):
+        """Batcher completion callback: retire the row's page stats and
+        (int8 slabs) zero the recycled pages' scales in every slab, so a
+        reused page starts from a fresh quantization grid instead of the
+        old request's amax."""
+        self.page_hist[row] = 0.0
+        if not self.quantized:
+            return
+        S = self.n_shards
+        if S > 1:
+            p2d = jnp.asarray(pages.reshape(S, self.layout.pages_per_shard))
+            idx = jnp.arange(S)[:, None]
+            self.slabs = {
+                k: s._replace(k_scale=s.k_scale.at[idx, :, p2d].set(0.0),
+                              v_scale=s.v_scale.at[idx, :, p2d].set(0.0))
+                for k, s in self.slabs.items()}
+        else:
+            from repro.serve.paged_cache import reset_page_scales
+            self.slabs = {
+                k: s._replace(k_scale=reset_page_scales(s.k_scale, pages),
+                              v_scale=reset_page_scales(s.v_scale, pages))
+                for k, s in self.slabs.items()}
 
     def _admit(self):
         from repro.core.scheduler import PAD_SENTINEL
 
         for req in self.batcher.admit():
             self.page_tables[req.row] = req.pages
+            self.page_hist[req.row] = 0.0
             if self.n_shards > 1:
                 self.slot_pos = self.slot_pos.at[:, req.row].set(
                     PAD_SENTINEL)
@@ -433,8 +531,38 @@ class ContinuousEngine:
                     jnp.asarray(rvp))
             self.batcher.to_decode(req, first)
 
+    def _page_keep_mask(self, t_vec, active) -> np.ndarray:
+        """(R, npp) bool: pages each request reads this step. History at or
+        above the threshold keeps a page; sink pages and the page being
+        written are unconditionally kept (Salca's rule: never starve the
+        global prefix or the live write point); inactive rows keep-all
+        (their reads are already null-routed)."""
+        lay = self.layout
+        R = self.ccfg.max_batch
+        keep = self.page_hist >= self.ccfg.page_sparsity_threshold
+        keep[:, :lay.sink_pages] = True
+        p = np.asarray(t_vec, np.int64)
+        slot = np.where(p < lay.n_global, p,
+                        lay.n_sink + (p - lay.n_global) % lay.ring_cap)
+        keep[np.arange(R), slot // lay.page] = True
+        keep[~np.asarray(active, bool)] = True
+        return keep
+
+    def _update_page_stats(self, page_m: np.ndarray, active) -> None:
+        """Fold one step's per-page max scores into the decayed history.
+        ``rel`` is log-relative to the request's row max, so the history
+        is softmax-shift invariant; fully-masked/skipped pages carry
+        NEG_INF and therefore only decay."""
+        pm = np.asarray(page_m, np.float64)
+        rowmax = pm.max(axis=1, keepdims=True)
+        rel = pm - np.where(rowmax <= -1e29, 0.0, rowmax)
+        upd = np.maximum(rel, self.page_hist - self.ccfg.page_stat_decay)
+        act = np.asarray(active, bool)[:, None]
+        self.page_hist = np.where(act, upd, self.page_hist)
+
     def _advance_decode(self, params, reqs):
         R, S = self.ccfg.max_batch, self.n_shards
+        lay = self.layout
         tokens = np.zeros(R, np.int32)
         t_vec = np.zeros(R, np.int32)
         active = np.zeros(R, bool)
@@ -443,17 +571,38 @@ class ContinuousEngine:
             t_vec[req.row] = req.t_next
             active[req.row] = True
         page_tables = (self.page_tables.reshape(
-            R, S, self.layout.pages_per_shard).transpose(1, 0, 2).copy()
+            R, S, lay.pages_per_shard).transpose(1, 0, 2).copy()
             if S > 1 else self.page_tables.copy())
-        logits, self.slabs, self.slot_pos = self._decode_jit(
-            params, self.slabs, page_tables,
-            self.slot_pos, jnp.asarray(tokens), jnp.asarray(t_vec),
-            jnp.asarray(active))
+        args = [params, self.slabs, page_tables, self.slot_pos,
+                jnp.asarray(tokens), jnp.asarray(t_vec), jnp.asarray(active)]
+        if self.track_stats:
+            keep = self._page_keep_mask(t_vec, active)
+            keep_dev = (keep.reshape(R, S, lay.pages_per_shard)
+                        .transpose(1, 0, 2).copy() if S > 1 else keep)
+            logits, self.slabs, self.slot_pos, page_m = self._decode_jit(
+                *args, jnp.asarray(keep_dev))
+            if S > 1:
+                page_m = np.asarray(page_m).transpose(1, 0, 2).reshape(
+                    R, lay.pages_per_req)
+            self._update_page_stats(np.asarray(page_m), active)
+            pages_read = int(keep[active].sum())
+        else:
+            logits, self.slabs, self.slot_pos = self._decode_jit(*args)
+            pages_read = len(reqs) * lay.pages_per_req
         self.counters["decode_launches"] += 1
         self.counters["decode_tokens"] += len(reqs)
+        self.counters["decode_pages_read"] += pages_read
+        self.counters["decode_pages_total"] += len(reqs) * lay.pages_per_req
         logits = np.asarray(logits)
         for req in reqs:
             self.batcher.record_token(req, int(np.argmax(logits[req.row])))
+
+    def slab_resident_bytes(self) -> int:
+        """Actual bytes of the pooled KV slabs (all segments, K+V, plus
+        the per-(layer, page) scale arrays for int8 slabs) — what the
+        quantized-serving benchmark reports as resident KV footprint."""
+        return sum(int(a.size) * a.dtype.itemsize
+                   for a in jax.tree_util.tree_leaves(self.slabs))
 
     def step(self, params) -> bool:
         """One engine iteration: admit, advance every prefilling request by

@@ -21,6 +21,12 @@ batch, so every sequence must sit at the same ``t``. The continuous-batching
 engine uses the pooled paged slab (:mod:`repro.serve.paged_cache`) instead:
 per-request page tables AND per-request positions (plus a ring sized for the
 full dilated lookback, which this layout under-provisions at dilation > 1).
+
+NOTE: this cache is full-precision only — K/V are stored in the model's
+compute dtype. The int8 quantized-slab path (``kv_dtype="int8"`` with
+per-(layer, page) scales) lives entirely in the paged slab; quantizing here
+would buy little (the ring is already O(window) slots) and the lockstep
+engine stays the exact-arithmetic baseline the quant path is tested against.
 """
 from __future__ import annotations
 

@@ -30,6 +30,18 @@ order is transparent — exactly the legacy ring-cache argument, per request.
 
 Cache footprint accounting lives in :func:`slab_bytes` and feeds
 ``benchmarks/serve_stats.py`` (BENCH_serve.json).
+
+**Quantized slab** (``kv_dtype="int8"``): K/V are stored int8 with one f32
+scale per (layer, page) riding next to the page tables
+(:class:`PagedSlab` ``k_scale``/``v_scale``). :func:`quant_slab_write`
+grows a page's scale monotonically as hotter rows land in it (rescaling
+the already-resident int8 payload by the old/new ratio — exact where the
+ratio is 1) and forces the null page's scale to 0, so inactive-row
+scatters stay harmless AND dequantize to exact zeros. Reads dequantize
+per page tile — :func:`gather_view` for the XLA twin, scalar-prefetched
+scales inside the Pallas kernel. Recycled pages get their scales reset to
+0 on admission (the position map, not the scale, is the validity source
+of truth; the reset just stops stale amaxes from inflating the grid).
 """
 from __future__ import annotations
 
@@ -171,17 +183,38 @@ class PagedSlab(NamedTuple):
 
     Layer ``i`` of the segment's stacked scan uses slab row ``i``; all
     layers of all segments share the SAME page tables (a request's page p
-    means page p in every layer — the standard paged-KV invariant)."""
+    means page p in every layer — the standard paged-KV invariant).
+
+    ``k_scale``/``v_scale`` are ``None`` for fp slabs; for int8 slabs they
+    are f32 ``(n_layers, n_pages)`` per-(layer, page) dequant scales
+    (``lead`` dims prepended under sharding, striping with their pages).
+    Scale 0 marks an empty page — in particular the null page 0, always."""
     k: jax.Array
     v: jax.Array
+    k_scale: jax.Array = None
+    v_scale: jax.Array = None
+
+    @property
+    def quantized(self) -> bool:
+        return self.k_scale is not None
 
 
 def slab_init(n_layers: int, n_pages: int, page: int, n_kv_heads: int,
-              head_dim: int, dtype, lead: tuple = ()) -> PagedSlab:
+              head_dim: int, dtype, lead: tuple = (),
+              quantized: bool = False) -> PagedSlab:
     """``lead``: extra leading dims — ``(n_shards,)`` stacks one per-shard
-    pool per sequence shard (row s lives on shard s of the "seq" axis)."""
+    pool per sequence shard (row s lives on shard s of the "seq" axis).
+    ``quantized=True`` allocates int8 K/V (``dtype`` then only names the
+    compute dtype readers dequantize to) plus zeroed per-(layer, page)
+    scale arrays."""
     shape = (*lead, n_layers, n_pages, page, n_kv_heads, head_dim)
-    return PagedSlab(k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype))
+    if not quantized:
+        return PagedSlab(k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype))
+    sshape = (*lead, n_layers, n_pages)
+    return PagedSlab(k=jnp.zeros(shape, jnp.int8),
+                     v=jnp.zeros(shape, jnp.int8),
+                     k_scale=jnp.zeros(sshape, jnp.float32),
+                     v_scale=jnp.zeros(sshape, jnp.float32))
 
 
 def slab_write(k_slab: jax.Array, v_slab: jax.Array, phys: jax.Array,
@@ -195,18 +228,74 @@ def slab_write(k_slab: jax.Array, v_slab: jax.Array, phys: jax.Array,
             v_slab.at[phys, off].set(v_t.astype(v_slab.dtype)))
 
 
+def _quant_write_one(slab: jax.Array, scale: jax.Array, phys: jax.Array,
+                     off: jax.Array, x: jax.Array):
+    """int8 scatter of ``x`` into one layer's slab with per-page scales.
+
+    slab: (n_pages, page, Hkv, hd) int8; scale: (n_pages,) f32; phys/off:
+    (...,) write targets; x: (..., Hkv, hd) new rows. Page scales grow
+    MONOTONICALLY (scatter-max of the incoming rows' amax/127): growth
+    rescales the page's resident int8 payload by old/new — exactly 1.0
+    (bit-identical payload) for untouched pages — and the null page's
+    scale is pinned to 0 so routed-away writes quantize to zeros."""
+    x = x.astype(jnp.float32)
+    row_scale = jnp.max(jnp.abs(x), axis=(-2, -1)) / 127.0      # (...,)
+    new_scale = scale.at[phys].max(row_scale).at[0].set(0.0)
+    ratio = jnp.where(new_scale > 0.0,
+                      scale / jnp.maximum(new_scale, 1e-30), 1.0)
+    slab = jnp.clip(jnp.round(slab.astype(jnp.float32)
+                              * ratio[:, None, None, None]),
+                    -128, 127).astype(jnp.int8)
+    s = new_scale[phys][..., None, None]                        # (...,1,1)
+    q = jnp.where(s > 0.0,
+                  jnp.clip(jnp.round(x / jnp.maximum(s, 1e-30)), -128, 127),
+                  0.0).astype(jnp.int8)
+    return slab.at[phys, off].set(q), new_scale
+
+
+def quant_slab_write(k_slab: jax.Array, v_slab: jax.Array,
+                     k_scale: jax.Array, v_scale: jax.Array,
+                     phys: jax.Array, off: jax.Array,
+                     k_t: jax.Array, v_t: jax.Array):
+    """Quantizing twin of :func:`slab_write` for int8 slabs.
+
+    Same write targets/contract, plus the per-(page,) scale vectors for
+    the layer being written; returns (k_slab, v_slab, k_scale, v_scale)."""
+    k_slab, k_scale = _quant_write_one(k_slab, k_scale, phys, off, k_t)
+    v_slab, v_scale = _quant_write_one(v_slab, v_scale, phys, off, v_t)
+    return k_slab, v_slab, k_scale, v_scale
+
+
+def reset_page_scales(scale: jax.Array, pages: np.ndarray) -> jax.Array:
+    """Zero the scales of freshly (re)allocated pages, all layers at once.
+
+    scale: (..., n_layers, n_pages); pages: (n,) physical page ids. Called
+    on admission so a recycled page's stale amax can't inflate the new
+    request's quantization grid."""
+    return scale.at[..., jnp.asarray(pages, jnp.int32)].set(0.0)
+
+
 def gather_view(k_slab: jax.Array, v_slab: jax.Array,
-                page_tables: jax.Array):
+                page_tables: jax.Array, k_scale: jax.Array = None,
+                v_scale: jax.Array = None, dtype=None):
     """Materialize per-request logical KV views (the XLA decode twin path;
     the Pallas kernel chases the page table instead and never does this).
 
     k_slab/v_slab: (n_pages, page, Hkv, hd); page_tables: (B, npp).
-    Returns (B, npp * page, Hkv, hd) x 2."""
+    For int8 slabs pass the layer's ``k_scale``/``v_scale`` (n_pages,)
+    and the compute ``dtype``: each gathered page tile is dequantized by
+    its own scale. Returns (B, npp * page, Hkv, hd) x 2."""
     B, npp = page_tables.shape
     _, page, Hkv, hd = k_slab.shape
-    kv = k_slab[page_tables].reshape(B, npp * page, Hkv, hd)
-    vv = v_slab[page_tables].reshape(B, npp * page, Hkv, hd)
-    return kv, vv
+    kv = k_slab[page_tables]                     # (B, npp, page, Hkv, hd)
+    vv = v_slab[page_tables]
+    if k_scale is not None:
+        sk = k_scale[page_tables][:, :, None, None, None]
+        sv = v_scale[page_tables][:, :, None, None, None]
+        kv = (kv.astype(jnp.float32) * sk).astype(dtype)
+        vv = (vv.astype(jnp.float32) * sv).astype(dtype)
+    return (kv.reshape(B, npp * page, Hkv, hd),
+            vv.reshape(B, npp * page, Hkv, hd))
 
 
 def empty_positions(n_requests: int, layout: PagedLayout) -> jax.Array:
@@ -253,10 +342,18 @@ class PageAllocator:
 
 # ---------------------------------------------------------------------- #
 def slab_bytes(n_layers_total: int, n_pages: int, page: int,
-               n_kv_heads: int, head_dim: int, dtype_bytes: int = 2) -> int:
-    """Total pooled slab footprint (all segments' layers, K+V)."""
-    return 2 * n_layers_total * n_pages * page * n_kv_heads * head_dim \
+               n_kv_heads: int, head_dim: int, dtype_bytes: int = 2,
+               with_scales: bool = False) -> int:
+    """Total pooled slab footprint (all segments' layers, K+V).
+
+    ``with_scales`` adds the int8 slab's per-(layer, page) f32 scale
+    arrays (K and V) — the honest footprint the quantized-serving
+    benchmark compares against the fp slab."""
+    base = 2 * n_layers_total * n_pages * page * n_kv_heads * head_dim \
         * dtype_bytes
+    if with_scales:
+        base += 2 * n_layers_total * n_pages * 4
+    return base
 
 
 def full_cache_bytes(n_layers_total: int, batch: int, max_len: int,

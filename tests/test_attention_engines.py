@@ -152,6 +152,63 @@ def test_gradients_blockwise_vs_oracle():
                                    rtol=5e-3, atol=5e-3)
 
 
+def test_dynamic_q8_roundtrip_per_tensor():
+    """Per-tensor dynamic int8: round-trip error bounded by scale/2 (one
+    rounding step) and the max-magnitude element is exactly representable."""
+    from repro.core.quant import dequant, dynamic_q8
+    x = jnp.asarray(RNG.normal(size=(4, 33, 7)) * 3.0, jnp.float32)
+    q, scale = dynamic_q8(x)
+    assert q.dtype == jnp.int8 and scale.ndim == 0
+    back = dequant(q, scale)
+    np.testing.assert_allclose(np.asarray(back), np.asarray(x),
+                               atol=float(scale) / 2 + 1e-7)
+    amax_idx = np.unravel_index(np.argmax(np.abs(np.asarray(x))), x.shape)
+    assert abs(int(q[amax_idx])) == 127
+
+
+def test_dynamic_q8_roundtrip_grouped_axis():
+    """axis=reduced axes: one scale per remaining-axis group, each group's
+    round-trip bounded by ITS scale (not the global amax)."""
+    from repro.core.quant import dequant, dynamic_q8
+    x = np.asarray(RNG.normal(size=(5, 16, 8)), np.float32)
+    x[0] *= 100.0   # wildly different group magnitudes
+    x[1] *= 0.01
+    q, scale = dynamic_q8(jnp.asarray(x), axis=(1, 2))
+    assert scale.shape == (5, 1, 1)
+    back = np.asarray(dequant(q, scale))
+    for g in range(5):
+        bound = float(np.asarray(scale)[g, 0, 0]) / 2 + 1e-7
+        assert np.max(np.abs(back[g] - x[g])) <= bound
+
+
+def test_dynamic_q8_all_zero_and_denormal():
+    """All-zero input survives (1e-8 amax floor, no div-by-zero NaNs) and
+    denormal-range inputs quantize to finite values."""
+    from repro.core.quant import dequant, dynamic_q8
+    q, scale = dynamic_q8(jnp.zeros((3, 4)))
+    assert float(scale) > 0.0 and not np.any(np.asarray(q))
+    assert not np.any(np.isnan(np.asarray(dequant(q, scale))))
+    tiny = jnp.full((2, 2), 1e-12, jnp.float32)  # below the 1e-8 floor
+    q, scale = dynamic_q8(tiny)
+    back = np.asarray(dequant(q, scale))
+    assert np.all(np.isfinite(back)) and np.max(np.abs(back)) <= 1e-8
+
+
+def test_group_q8_roundtrip_matches_page_layout():
+    """group_q8 over the slab layout (L, P, page, Hkv, hd) with
+    n_group_axes=2: one scale per (layer, page), group-wise round-trip
+    bound, and group_dequant inverts to the requested dtype."""
+    from repro.core.quant import group_dequant, group_q8
+    x = jnp.asarray(RNG.normal(size=(2, 3, 4, 2, 8)), jnp.float32)
+    q, scale = group_q8(x, 2)
+    assert q.shape == x.shape and scale.shape == (2, 3)
+    back = group_dequant(q, scale, dtype=jnp.bfloat16)
+    assert back.dtype == jnp.bfloat16
+    err = np.abs(np.asarray(back, np.float32) - np.asarray(x))
+    bound = np.asarray(scale)[:, :, None, None, None] / 2 + 0.05
+    assert np.all(err <= bound)
+
+
 def test_quantized_attention_error_small():
     """Paper §6.4: int8(4-frac) QKV quantization has small output error."""
     from repro.core.quant import quantized_attention
