@@ -108,6 +108,28 @@ def main() -> None:
         failures.append(("quant_page_reads",
                          d["serve/quant_page_read_fraction"],
                          "< 1.0 (stats-driven page skipping engages)"))
+    # fault-tolerant serving: a killed-and-resumed run must emit tokens
+    # identical to the uninterrupted engine (exactly-once), work lost per
+    # crash bounded by the checkpoint interval, the page-pressure scenario
+    # that previously raised 'page pool too small' must now complete via
+    # preemption + re-prefill at token parity, and injected allocator
+    # exhaustion must be recovered by the supervisor
+    for k in ("serve/recovery_restore_parity",
+              "serve/recovery_preempt_parity",
+              "serve/recovery_exhaustion_recovered"):
+        if k in d and d[k] != 1.0:
+            failures.append((k, d[k], "== 1.0"))
+    if "serve/recovery_max_step_loss" in d and \
+            d["serve/recovery_max_step_loss"] > serve_stats.RECOVERY_CKPT_EVERY:
+        failures.append(("serve_recovery_step_loss",
+                         d["serve/recovery_max_step_loss"],
+                         f"<= {serve_stats.RECOVERY_CKPT_EVERY} "
+                         f"(work loss bounded by checkpoint interval)"))
+    if "serve/recovery_preemptions" in d and \
+            d["serve/recovery_preemptions"] <= 0:
+        failures.append(("serve_recovery_preemptions",
+                         d["serve/recovery_preemptions"],
+                         "> 0 (preemption must engage)"))
     # sequence parallelism: halo exchange must beat the all-gather ring on
     # EVERY workload (the (w+Bk)·d vs n·d claim), and the sharded engines
     # must be numerically identical to the single-device fused path

@@ -40,6 +40,23 @@ and with ``measure``: an 8-shard (forced host devices, subprocess) int8 +
 page-sparse engine vs its single-device twin, gated token-exact — scales
 stripe with the pages and the keep mask comes from merged shard stats.
 
+Fault-tolerant serving (section ``recovery`` of the JSON, always
+collected, tempdir snapshot dirs):
+
+  * **kill/resume parity** — the ServeSupervisor with injected step
+    crashes: restored runs must emit tokens identical to the
+    uninterrupted engine (exactly-once emission), gated == 1.0, with work
+    lost per crash gated <= the checkpoint interval;
+  * **preemption + re-prefill** — a pool SMALLER than the worst-case
+    request footprint (the scenario that previously died with a
+    drain-time 'page pool too small' RuntimeError) now completes: a
+    higher-priority arrival preempts the resident decoder, which recovers
+    by chunked re-prefill — both token-exact vs lockstep, preemptions
+    gated > 0;
+  * **exhaustion recovery** — an injected allocator-exhaustion window
+    makes the bare engine raise the recoverable ResourceExhausted; the
+    supervisor retries through the window and still matches the oracle.
+
 Used by ``python -m benchmarks.run`` (section ``serve/``, launch-count and
 parity gates) and writable standalone via ``python -m benchmarks.serve_stats``.
 """
@@ -159,6 +176,117 @@ def _quant_section(cfg, model, params, prompts) -> dict:
                    "decode_pages_read": read, "decode_pages_total": total,
                    "page_read_fraction": read / total,
                    "parity_vs_dense_read": sparse_parity},
+    }
+
+
+RECOVERY_CRASH_AT = frozenset({3, 6})
+RECOVERY_CKPT_EVERY = 2
+
+
+def _recovery_section(cfg, model, params) -> dict:
+    """Fault-tolerance stats: supervisor kill/resume parity, page-pressure
+    preemption + re-prefill in a pool too small for the worst-case
+    footprint, and injected-exhaustion recovery."""
+    import tempfile
+
+    from repro.ft import FaultInjector, FaultPlan, ServeSupervisor
+    from repro.ft.faults import ResourceExhausted
+    from repro.models.layers import salo_pattern
+    from repro.serve.engine import (ContinuousConfig, ContinuousEngine,
+                                    ServeConfig, ServeEngine)
+    from repro.serve.paged_cache import layout_for_pattern
+
+    rng = np.random.default_rng(1)
+    prompts = [rng.integers(0, cfg.vocab_size, (L,)).astype(np.int32)
+               for L in PROMPT_LENS]
+
+    def lockstep(pp, n):
+        outs = []
+        for p in pp:
+            ls = ServeEngine(model, ServeConfig(max_len=len(p) + n))
+            outs.append(np.asarray(
+                ls.generate(params, jnp.asarray(p)[None], n))[0])
+        return outs
+
+    # --- kill/resume: injected crashes vs the uninterrupted run ---------- #
+    base = _engine_for(cfg, model)
+    base_rids = [base.submit(p, N_NEW) for p in prompts]
+    uninterrupted = base.run(params)
+
+    def mk():
+        eng = _engine_for(cfg, model)
+        for p in prompts:
+            eng.submit(p, N_NEW)
+        return eng
+
+    with tempfile.TemporaryDirectory() as ck:
+        sup = ServeSupervisor(
+            mk, params, ck, checkpoint_every=RECOVERY_CKPT_EVERY,
+            injector=FaultInjector(FaultPlan(crash_steps=RECOVERY_CRASH_AT)))
+        eng, hist = sup.run()
+    res = eng.batcher.results()
+    restore_parity = float(all(
+        np.array_equal(uninterrupted[a], res[b])
+        for a, b in zip(base_rids, sorted(res))))
+
+    # --- preemption + re-prefill in a too-small pool --------------------- #
+    # pool = pages_per_req -> 1 null + (pages_per_req - 1) usable: SMALLER
+    # than the worst-case footprint. Every request here previously ended in
+    # the drain-time 'page pool too small' RuntimeError; with variable
+    # footprints + preemption the whole scenario completes token-exact.
+    lay = layout_for_pattern(salo_pattern(cfg, causal=True), PAGE)
+    pa = rng.integers(0, cfg.vocab_size, (6,)).astype(np.int32)
+    pb = rng.integers(0, cfg.vocab_size, (5,)).astype(np.int32)
+    ref_a, ref_b = lockstep([pa, pb], 4)
+    small = ContinuousEngine(model, ContinuousConfig(
+        n_pages=lay.pages_per_req, page=PAGE, chunk=CHUNK, max_batch=4))
+    ra = small.submit(pa, 4, priority=0)
+    while not small.batcher.assemble()[1]:    # drive A into decode
+        small.step(params)
+    rb = small.submit(pb, 4, priority=1)      # preempts A for its pages
+    pres = small.run(params)
+    preempt_parity = float(np.array_equal(pres[ra], ref_a)
+                           and np.array_equal(pres[rb], ref_b))
+    preemptions = small.batcher.preemptions
+
+    # --- injected allocator exhaustion ----------------------------------- #
+    plan = FaultPlan(exhaust_steps=frozenset({0, 1}))
+    inj = FaultInjector(plan)
+    bare = mk()
+    inj.attach(bare)
+    inj.before_step(0)
+    try:
+        bare.step(params)
+        raised = False
+    except ResourceExhausted:
+        raised = True
+    with tempfile.TemporaryDirectory() as ck:
+        sup = ServeSupervisor(mk, params, ck,
+                              injector=FaultInjector(plan))
+        eng2, hist2 = sup.run()
+    res2 = eng2.batcher.results()
+    exh_parity = all(np.array_equal(uninterrupted[a], res2[b])
+                     for a, b in zip(base_rids, sorted(res2)))
+    return {
+        "kill_resume": {
+            "crash_attempts": sorted(RECOVERY_CRASH_AT),
+            "checkpoint_every": RECOVERY_CKPT_EVERY,
+            "restarts": hist["restarts"],
+            "steps_lost": hist["steps_lost"],
+            "max_step_loss": hist["max_step_loss"],
+            "restore_parity": restore_parity,
+        },
+        "preemption": {
+            "pool_pages_usable": lay.pages_per_req - 1,
+            "worst_case_pages": lay.pages_per_req,
+            "preemptions": preemptions,
+            "parity": preempt_parity,
+        },
+        "exhaustion": {
+            "bare_engine_raised": raised,
+            "supervisor_restarts": hist2["restarts"],
+            "recovered": float(raised and exh_parity),
+        },
     }
 
 
@@ -284,6 +412,7 @@ def collect(measure: bool = True) -> dict:
             "bytes_ratio": dense / slab,
         },
         "quant": _quant_section(cfg, model, params, prompts),
+        "recovery": _recovery_section(cfg, model, params),
     }
     if measure:
         data["quant"]["sharded"] = _measure_quant_shard_parity()
@@ -354,6 +483,20 @@ def serve_benchmark(rows, measure: bool = True,
         rows.append(("serve/quant_sharded_parity",
                      qu["sharded"]["greedy_token_match"],
                      "8shard_int8_sparse==single_device"))
+    rec = data["recovery"]
+    kr, pe, ex = rec["kill_resume"], rec["preemption"], rec["exhaustion"]
+    rows.append(("serve/recovery_restore_parity", kr["restore_parity"],
+                 f"restarts={kr['restarts']}_crash_at="
+                 f"{'+'.join(map(str, kr['crash_attempts']))}"))
+    rows.append(("serve/recovery_max_step_loss", float(kr["max_step_loss"]),
+                 f"checkpoint_every={kr['checkpoint_every']}"))
+    rows.append(("serve/recovery_preempt_parity", pe["parity"],
+                 f"pool={pe['pool_pages_usable']}_worst_case="
+                 f"{pe['worst_case_pages']}_pages"))
+    rows.append(("serve/recovery_preemptions", float(pe["preemptions"]),
+                 "victims_evicted_then_reprefilled"))
+    rows.append(("serve/recovery_exhaustion_recovered", ex["recovered"],
+                 f"supervisor_restarts={ex['supervisor_restarts']}"))
     if "throughput" in data:
         tp = data["throughput"]
         rows.append(("serve/ragged_throughput_speedup", tp["speedup"],
@@ -386,17 +529,28 @@ def main():
                     d["serve/quant_slab_bytes_ratio"], ">= 3.5"))
     for k in ("serve/greedy_parity", "serve/quant_parity_vs_fp",
               "serve/quant_keepall_exact", "serve/quant_sparse_parity",
-              "serve/quant_sharded_parity"):
+              "serve/quant_sharded_parity",
+              "serve/recovery_restore_parity",
+              "serve/recovery_preempt_parity",
+              "serve/recovery_exhaustion_recovered"):
         if k in d and d[k] != 1.0:
             bad.append((k, d[k], "== 1.0"))
     if d["serve/quant_page_read_fraction"] >= 1.0:
         bad.append(("serve/quant_page_read_fraction",
                     d["serve/quant_page_read_fraction"], "< 1.0"))
+    if d["serve/recovery_max_step_loss"] > RECOVERY_CKPT_EVERY:
+        bad.append(("serve/recovery_max_step_loss",
+                    d["serve/recovery_max_step_loss"],
+                    f"<= {RECOVERY_CKPT_EVERY} (bounded work loss)"))
+    if d["serve/recovery_preemptions"] <= 0:
+        bad.append(("serve/recovery_preemptions",
+                    d["serve/recovery_preemptions"],
+                    "> 0 (preemption must engage)"))
     if bad:
         for b in bad:
             print(f"CHECK-FAILED: {b}", file=sys.stderr)
         raise SystemExit(1)
-    print("# serve quant gates hold")
+    print("# serve quant + recovery gates hold")
 
 
 if __name__ == "__main__":

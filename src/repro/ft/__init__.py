@@ -1,2 +1,7 @@
-from repro.ft.checkpoint import CheckpointManager, save, restore, latest_step
-from repro.ft.manager import StragglerWatchdog, run_with_restarts, reshard
+from repro.ft.checkpoint import (CheckpointManager, latest_step, restore,
+                                 save, sweep_stale_tmp)
+from repro.ft.faults import (RECOVERABLE, Fault, QueueFull, RejectedRequest,
+                             ResourceExhausted, RestartsExhausted, StepCrash)
+from repro.ft.injection import FaultInjector, FaultPlan
+from repro.ft.manager import (ServeSupervisor, StragglerWatchdog, reshard,
+                              run_with_restarts)

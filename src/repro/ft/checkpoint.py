@@ -27,6 +27,40 @@ import jax
 import numpy as np
 
 _SEP = "::"
+_TMP_RE = re.compile(r"tmp\.(\d+)\.(\d+)")
+
+
+def _pid_alive(pid: int) -> bool:
+    try:
+        os.kill(pid, 0)
+    except ProcessLookupError:
+        return False
+    except PermissionError:
+        return True  # exists, owned by someone else
+    except OSError:
+        return False
+    return True
+
+
+def sweep_stale_tmp(path: str) -> int:
+    """Remove orphaned ``tmp.<step>.<pid>`` dirs (a writer killed between
+    ``makedirs`` and the atomic ``os.rename`` leaks its tmp dir forever).
+
+    A tmp dir is stale when its writer pid is dead, or is THIS process
+    (writes within a process are serialized — see ``CheckpointManager.save``
+    joining the previous writer thread — so a same-pid tmp can only be an
+    abandoned earlier attempt). Returns the number of dirs removed; called
+    from :func:`save` before each write and from the keep-k GC."""
+    removed = 0
+    if not os.path.isdir(path):
+        return removed
+    for d in os.listdir(path):
+        m = _TMP_RE.fullmatch(d)
+        if m and (int(m.group(2)) == os.getpid()
+                  or not _pid_alive(int(m.group(2)))):
+            shutil.rmtree(os.path.join(path, d), ignore_errors=True)
+            removed += 1
+    return removed
 
 
 def _flatten(tree, upcast: bool = True):
@@ -48,6 +82,7 @@ def _flatten(tree, upcast: bool = True):
 def save(path: str, tree: Any, step: int) -> str:
     """Atomic checkpoint write. Returns the final directory."""
     final = os.path.join(path, f"step_{step:08d}")
+    sweep_stale_tmp(path)
     tmp = os.path.join(path, f"tmp.{step}.{os.getpid()}")
     os.makedirs(tmp, exist_ok=True)
     flat, _ = _flatten(tree)
@@ -113,6 +148,7 @@ class CheckpointManager:
         os.makedirs(path, exist_ok=True)
 
     def _gc(self):
+        sweep_stale_tmp(self.path)
         steps = sorted(int(m.group(1)) for d in os.listdir(self.path)
                        if (m := re.fullmatch(r"step_(\d+)", d)))
         for s in steps[: -self.keep] if self.keep else []:

@@ -1,13 +1,26 @@
-"""Run manager: straggler watchdog, failure/restart loop, elastic rescale.
+"""Run manager: straggler watchdog, failure/restart loops, elastic rescale.
 
 What actually runs on the fleet:
 
 * **StragglerWatchdog** — per-step wall-time EWMA; a step exceeding
   ``threshold x`` the EWMA is flagged (on a real pod this triggers hot-spare
   swap / re-slicing; here it's surfaced in metrics and tested by injection).
-* **run_with_restarts** — the supervisor loop: run step fn, on (injected or
-  real) failure restore the latest checkpoint and continue. Together with
-  atomic checkpoints this gives at-most-one-interval loss of work.
+  It is deliberately generic over what a "step" is: the train loop feeds it
+  train steps, :class:`ServeSupervisor` feeds it serving-engine steps.
+* **run_with_restarts** — the training supervisor loop: run step fn, on a
+  recoverable fault (:data:`repro.ft.faults.RECOVERABLE`) restore the latest
+  checkpoint and continue — under a bounded restart budget with exponential
+  backoff, so a deterministically failing step raises
+  :class:`~repro.ft.faults.RestartsExhausted` instead of looping forever.
+* **ServeSupervisor** — the serving twin: drives a
+  :class:`~repro.serve.engine.ContinuousEngine` step by step, snapshotting
+  the FULL serving state (slabs + scales, page tables, request lifecycle —
+  see ``ContinuousEngine.state_dict``) every ``checkpoint_every`` steps
+  through the atomic keep-k writer, and on a fault rebuilds the engine and
+  restores the latest snapshot. Greedy token output is **exactly-once**: a
+  run killed at any step and resumed emits tokens identical to an
+  uninterrupted run (tests/test_serve_ft.py). Work lost per restart is
+  bounded by the checkpoint interval.
 * **elastic rescale** — because checkpoints are mesh-portable
   (ft/checkpoint.py), a job interrupted on mesh A restarts on mesh B with a
   different device count; ``reshard`` re-places a live pytree.
@@ -19,6 +32,11 @@ import time
 from typing import Any, Callable, Optional
 
 import jax
+
+from repro.ft.checkpoint import CheckpointManager
+from repro.ft.faults import RECOVERABLE, RestartsExhausted, StepCrash
+
+_BACKOFF_CAP_S = 30.0
 
 
 @dataclasses.dataclass
@@ -53,15 +71,27 @@ def reshard(tree: Any, shardings: Any) -> Any:
         tree, shardings)
 
 
+def _backoff_sleep(backoff: float, n_restarts: int, sleep=time.sleep):
+    if backoff > 0.0:
+        sleep(min(backoff * (2 ** max(n_restarts - 1, 0)), _BACKOFF_CAP_S))
+
+
 def run_with_restarts(step_fn: Callable, state: Any, n_steps: int,
                       manager, *, checkpoint_every: int = 50,
                       fail_at: Optional[set] = None,
                       watchdog: Optional[StragglerWatchdog] = None,
-                      start_step: int = 0):
+                      start_step: int = 0, max_restarts: int = 16,
+                      backoff: float = 0.0, recoverable=RECOVERABLE):
     """Supervisor loop with checkpoint/restart semantics.
 
     ``step_fn(state, step) -> state``; ``fail_at``: steps at which to inject
-    a failure (tests). Returns (state, history dict).
+    a :class:`~repro.ft.faults.StepCrash` (tests). Only ``recoverable``
+    exceptions (default: the :mod:`repro.ft.faults` taxonomy — NOT bare
+    ``RuntimeError``) trigger a restore; each restart sleeps
+    ``backoff * 2**k`` (capped) and after ``max_restarts`` restarts the
+    loop raises :class:`~repro.ft.faults.RestartsExhausted` chaining the
+    last fault — a deterministically failing step can no longer spin
+    forever. Returns (state, history dict).
     """
     fail_at = set(fail_at or ())
     history = {"restarts": 0, "straggler_events": 0, "steps_run": 0}
@@ -71,7 +101,7 @@ def run_with_restarts(step_fn: Callable, state: Any, n_steps: int,
             t0 = time.perf_counter()
             if step in fail_at:
                 fail_at.discard(step)
-                raise RuntimeError(f"injected failure at step {step}")
+                raise StepCrash(f"injected failure at step {step}")
             state = step_fn(state, step)
             dt = time.perf_counter() - t0
             if watchdog is not None and watchdog.observe(dt):
@@ -80,8 +110,13 @@ def run_with_restarts(step_fn: Callable, state: Any, n_steps: int,
             if checkpoint_every and (step + 1) % checkpoint_every == 0:
                 manager.save(state, step + 1)
             step += 1
-        except RuntimeError:
+        except recoverable as e:
             history["restarts"] += 1
+            if history["restarts"] > max_restarts:
+                raise RestartsExhausted(
+                    f"step fn still failing after {max_restarts} restarts "
+                    f"(last fault: {e})") from e
+            _backoff_sleep(backoff, history["restarts"])
             restored, ck_step = manager.restore_latest(state)
             if restored is None:
                 step = start_step  # no checkpoint yet: restart from scratch
@@ -89,3 +124,95 @@ def run_with_restarts(step_fn: Callable, state: Any, n_steps: int,
                 state, step = restored, ck_step
     manager.wait()
     return state, history
+
+
+class ServeSupervisor:
+    """Fault-tolerant driver for the continuous serving engine.
+
+    ``make_engine()`` must return a fully-loaded engine — constructed AND
+    with its requests submitted; the supervisor then overwrites the
+    engine's state wholesale from the latest snapshot (if any), so the
+    factory is also the "restart from scratch" path when no checkpoint
+    exists yet. It may return a fresh engine each call (the true
+    killed-process semantics — also how the 8-shard subprocess test runs
+    it) or the same engine object (in-process recovery; ``load_state`` is
+    a wholesale replacement, so a boundary-consistent engine is restored
+    correctly either way, without re-jitting).
+
+    Per step: run injected faults (``injector.before_step``), one
+    ``engine.step``, feed the watchdog, snapshot every
+    ``checkpoint_every`` engine steps. On a recoverable fault
+    (:data:`repro.ft.faults.RECOVERABLE`): bounded restarts with
+    exponential backoff, engine rebuilt + restored from the latest
+    snapshot. ``run()`` returns ``(engine, history)``; completed tokens
+    are ``engine.batcher.results()``, expired/failed requests
+    ``engine.batcher.failures()``.
+    """
+
+    def __init__(self, make_engine: Callable, params, ckpt_dir: str, *,
+                 checkpoint_every: int = 4, max_restarts: int = 4,
+                 backoff: float = 0.0, keep: int = 3,
+                 injector=None, watchdog: Optional[StragglerWatchdog] = None,
+                 timer: Callable[[], float] = time.perf_counter,
+                 max_steps: Optional[int] = None):
+        self.make_engine = make_engine
+        self.params = params
+        self.manager = CheckpointManager(ckpt_dir, keep=keep,
+                                         async_write=False)
+        self.checkpoint_every = checkpoint_every
+        self.max_restarts = max_restarts
+        self.backoff = backoff
+        self.injector = injector
+        self.watchdog = watchdog
+        self.timer = timer
+        self.max_steps = max_steps
+
+    def _boot(self):
+        engine = self.make_engine()
+        restored, _ = self.manager.restore_latest(engine.state_dict())
+        if restored is not None:
+            engine.load_state(restored)
+        if self.injector is not None:
+            self.injector.attach(engine)
+        return engine
+
+    def run(self):
+        history = {"restarts": 0, "straggler_events": 0, "steps_run": 0,
+                   "steps_lost": 0, "max_step_loss": 0, "faults": []}
+        engine = self._boot()
+        while True:
+            step = engine.counters["engine_steps"]
+            if self.max_steps is not None \
+                    and history["steps_run"] >= self.max_steps:
+                break
+            try:
+                if self.injector is not None:
+                    self.injector.before_step(step)
+                t0 = self.timer()
+                more = engine.step(self.params)
+                dt = self.timer() - t0
+                if self.watchdog is not None and self.watchdog.observe(dt):
+                    history["straggler_events"] += 1
+                history["steps_run"] += 1
+                done = engine.counters["engine_steps"]
+                if more and self.checkpoint_every \
+                        and done % self.checkpoint_every == 0:
+                    self.manager.save(engine.state_dict(), done)
+                if not more:
+                    break
+            except RECOVERABLE as e:
+                history["restarts"] += 1
+                history["faults"].append(f"{type(e).__name__}: {e}")
+                if history["restarts"] > self.max_restarts:
+                    raise RestartsExhausted(
+                        f"serving still failing after {self.max_restarts} "
+                        f"restarts (last fault: {e})") from e
+                _backoff_sleep(self.backoff, history["restarts"])
+                done_before = engine.counters["engine_steps"]
+                engine = self._boot()
+                lost = max(done_before - engine.counters["engine_steps"], 0)
+                history["steps_lost"] += lost
+                history["max_step_loss"] = max(history["max_step_loss"],
+                                               lost)
+        self.manager.wait()
+        return engine, history

@@ -14,6 +14,16 @@ counters alongside throughput.
 axis (sequence-parallel serving: per-shard slab pools, sharded decode slot
 map, masked-psum partial combine). Needs >= N devices — on a CPU host set
 ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` before launching.
+
+``--snapshot-dir DIR`` runs the continuous engine under the fault-tolerant
+:class:`~repro.ft.manager.ServeSupervisor`: full engine snapshots (slabs,
+page tables, request lifecycle) every ``--snapshot-every`` steps through
+the atomic keep-k writer, bounded restarts on recoverable faults. Token
+output is exactly-once across kill/resume. ``--inject-crash-at`` takes a
+comma list of step attempts to crash (fault-injection demo):
+
+  PYTHONPATH=src python -m repro.launch.serve --arch smollm-135m --smoke \\
+      --engine continuous --snapshot-dir /tmp/snap --inject-crash-at 3,7
 """
 from __future__ import annotations
 
@@ -69,6 +79,23 @@ def main(argv=None):
                     help="per-step decay of the per-page score history; "
                          "must be > 0 for --page-sparsity-threshold to "
                          "ever skip a page")
+    ap.add_argument("--snapshot-dir", default=None,
+                    help="continuous engine: run under the ServeSupervisor "
+                         "with engine snapshots in this directory "
+                         "(fault-tolerant serving)")
+    ap.add_argument("--snapshot-every", type=int, default=4,
+                    help="engine steps between snapshots")
+    ap.add_argument("--max-restarts", type=int, default=4,
+                    help="restart budget before RestartsExhausted")
+    ap.add_argument("--max-queue", type=int, default=None,
+                    help="bound the admission queue (submit raises "
+                         "QueueFull beyond it); unset = unbounded")
+    ap.add_argument("--deadline-s", type=float, default=None,
+                    help="per-request deadline in seconds; overdue "
+                         "requests fail with a reason and free their pages")
+    ap.add_argument("--inject-crash-at", default=None,
+                    help="comma list of step attempts at which to inject "
+                         "a StepCrash (needs --snapshot-dir)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -95,17 +122,44 @@ def main(argv=None):
             mesh = make_mesh((args.seq_shards,), ("seq",))
         lay = layout_for_pattern(salo_pattern(cfg, causal=True), args.page,
                                  shards=args.seq_shards)
-        eng = ContinuousEngine(model, ContinuousConfig(
+        ccfg = ContinuousConfig(
             n_pages=1 + max_batch * lay.pages_per_shard, page=args.page,
             chunk=args.chunk, max_batch=max_batch,
             seq_shards=args.seq_shards, kv_dtype=args.kv_dtype,
             page_sparsity_threshold=args.page_sparsity_threshold,
-            page_stat_decay=args.page_stat_decay), mesh=mesh)
+            page_stat_decay=args.page_stat_decay,
+            max_queue=args.max_queue)
         lens = _ragged_lengths(args.prompt_len, args.batch, rng)
-        rids = [eng.submit(rng.integers(0, cfg.vocab_size, (L,)),
-                           args.new_tokens) for L in lens]
+        prompts = [rng.integers(0, cfg.vocab_size, (L,)) for L in lens]
+
+        def make_engine():
+            eng = ContinuousEngine(model, ccfg, mesh=mesh)
+            for p in prompts:
+                eng.submit(p, args.new_tokens, deadline_s=args.deadline_s)
+            return eng
+
         t0 = time.perf_counter()
-        results = eng.run(params)
+        if args.snapshot_dir:
+            from repro.ft import FaultInjector, FaultPlan, ServeSupervisor
+            injector = None
+            if args.inject_crash_at:
+                injector = FaultInjector(FaultPlan(crash_steps=frozenset(
+                    int(s) for s in args.inject_crash_at.split(","))))
+            sup = ServeSupervisor(
+                make_engine, params, args.snapshot_dir,
+                checkpoint_every=args.snapshot_every,
+                max_restarts=args.max_restarts, injector=injector)
+            eng, history = sup.run()
+            results = eng.batcher.results()
+            print(f"# supervisor: {history}")
+            if eng.batcher.failures():
+                print(f"# failed: {eng.batcher.failures()}")
+        else:
+            if args.inject_crash_at:
+                ap.error("--inject-crash-at needs --snapshot-dir")
+            eng = make_engine()
+            results = eng.run(params)
+        rids = sorted(results)
         dt = time.perf_counter() - t0
         total_new = args.batch * args.new_tokens
         print(f"# arch={cfg.name} engine=continuous batch={args.batch} "

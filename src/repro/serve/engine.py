@@ -18,13 +18,16 @@ outputs match the lockstep baseline token-for-token
 from __future__ import annotations
 
 import dataclasses
+import json
+import time
 from functools import partial
-from typing import Dict, Optional
+from typing import Callable, Dict, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.ft.faults import ResourceExhausted
 from repro.models.model import Model
 
 
@@ -121,7 +124,14 @@ class ContinuousConfig:
     pages and the current write page are always kept. ``-inf`` keeps the
     machinery on but skips nothing (token-identical to ``None``).
     ``page_stat_decay`` is the per-step additive log-space decay
-    (``hist = max(rel_score, hist - decay)``); 0 = pure historical max."""
+    (``hist = max(rel_score, hist - decay)``); 0 = pure historical max.
+
+    ``max_queue`` bounds the admission queue (``submit`` raises
+    :class:`~repro.ft.faults.QueueFull` beyond it — backpressure); ``None``
+    is unbounded. ``preempt`` enables page-pressure preemption: when the
+    queue head cannot get pages, the youngest strictly-lower-priority
+    decoding request is evicted and later recovered by chunked re-prefill
+    (see :meth:`repro.serve.batcher.Batcher.maybe_preempt`)."""
     n_pages: int
     page: int = 8
     chunk: int = 16
@@ -131,6 +141,8 @@ class ContinuousConfig:
     kv_dtype: str = "compute"
     page_sparsity_threshold: Optional[float] = None
     page_stat_decay: float = 0.0
+    max_queue: Optional[int] = None
+    preempt: bool = True
 
 
 class ContinuousEngine:
@@ -143,7 +155,8 @@ class ContinuousEngine:
     """
 
     def __init__(self, model: Model, ccfg: ContinuousConfig, mesh=None,
-                 seq_axis: str = "seq"):
+                 seq_axis: str = "seq",
+                 clock: Optional[Callable[[], float]] = None):
         from repro.models import layers as L
         from repro.models import transformer as T
         from repro.serve.batcher import Batcher
@@ -176,7 +189,9 @@ class ContinuousEngine:
             raise NotImplementedError("continuous serving: causal 1-D only")
         self.layout = layout_for_pattern(self.pattern, ccfg.page,
                                          shards=self.n_shards)
-        self.batcher = Batcher(self.layout, ccfg.n_pages, ccfg.max_batch)
+        self.batcher = Batcher(self.layout, ccfg.n_pages, ccfg.max_batch,
+                               max_queue=ccfg.max_queue,
+                               clock=clock or time.monotonic)
         self.batcher.on_finish = self._release_hook
 
         lay = self.layout
@@ -214,7 +229,8 @@ class ContinuousEngine:
                                     np.int32)
         self.counters = {"prefill_launches": 0, "decode_launches": 0,
                          "prefill_tokens": 0, "decode_tokens": 0,
-                         "decode_pages_read": 0, "decode_pages_total": 0}
+                         "decode_pages_read": 0, "decode_pages_total": 0,
+                         "engine_steps": 0}
         if self.n_shards > 1:
             self._chunk_jit = jax.jit(self._chunk_sharded)
             self._decode_jit = jax.jit(self._decode_sharded)
@@ -426,8 +442,10 @@ class ContinuousEngine:
         return fn(*args)
 
     # --------------------------- host driving -------------------------- #
-    def submit(self, prompt, max_new: int) -> int:
-        return self.batcher.submit(prompt, max_new)
+    def submit(self, prompt, max_new: int, priority: int = 0,
+               deadline_s: Optional[float] = None) -> int:
+        return self.batcher.submit(prompt, max_new, priority=priority,
+                                   deadline_s=deadline_s)
 
     def _release_hook(self, row: int, pages: np.ndarray):
         """Batcher completion callback: retire the row's page stats and
@@ -466,12 +484,19 @@ class ContinuousEngine:
 
     def _advance_prefill(self, params, req):
         """Run the request's next chunk: ONE fused table-driven pass
-        (one per shard under sequence parallelism)."""
+        (one per shard under sequence parallelism).
+
+        A fresh request prefills its prompt; a preemption-resumed request
+        prefills ``prompt + out[:-1]`` (``req.prefill_tokens``) — the exact
+        token stream the evicted KV was built from — through this same
+        chunked path, then rejoins decode at its old position without
+        re-emitting anything."""
         from repro.core.scheduler import (BIG, build_chunk_plan,
                                           ring_view_positions)
 
         lay, page, S = self.layout, self.ccfg.page, self.n_shards
-        P = req.prompt_len
+        src = req.prefill_tokens
+        P = req.prefill_len
         c0 = req.prefilled
         clen = min(self.ccfg.chunk, P - c0)
         c1 = c0 + clen
@@ -483,7 +508,7 @@ class ContinuousEngine:
         pos_q = np.full(Cp, BIG, np.int32)
         pos_q[:clen] = np.arange(c0, c1, dtype=np.int32)
         tokens = np.zeros(Cp, np.int32)
-        tokens[:clen] = req.prompt[c0:c1]
+        tokens[:clen] = src[c0:c1]
         # Slab write targets: ring-overwritten positions (chunk longer than
         # the ring) and padded rows route to the null page.
         pos = np.arange(c0, c0 + Cp, dtype=np.int64)
@@ -605,22 +630,36 @@ class ContinuousEngine:
                    for a in jax.tree_util.tree_leaves(self.slabs))
 
     def step(self, params) -> bool:
-        """One engine iteration: admit, advance every prefilling request by
-        one chunk, run one ragged decode step for the decoding cohort.
-        Returns True while work remains."""
+        """One engine iteration: expire overdue requests, admit (preempting
+        lower-priority decoders on page pressure), advance every prefilling
+        request by one chunk, run one ragged decode step for the decoding
+        cohort. Returns True while work remains.
+
+        Truly-oversized requests are rejected at ``submit``, so a stalled
+        queue here means transient pressure: if nothing at all is in
+        flight and the head still cannot get pages (e.g. an injected
+        exhaustion window), the step raises the RECOVERABLE
+        :class:`~repro.ft.faults.ResourceExhausted` — the supervisor
+        retries instead of the old drain-time dead-end ``RuntimeError``."""
+        self.batcher.expire()
         self._admit()
+        if self.batcher.queue and self.ccfg.preempt \
+                and self.batcher.maybe_preempt():
+            self._admit()
         pre, dec = self.batcher.assemble()
         if not pre and not dec:
             if self.batcher.queue:
-                raise RuntimeError(
-                    "page pool too small for a single request "
-                    f"(need {self.layout.pages_per_shard} per shard, "
-                    f"pool {min(a.n_free for a in self.batcher.allocs)})")
+                raise ResourceExhausted(
+                    "admission stalled with nothing in flight: head of "
+                    f"queue needs {self.batcher._shard_needs(self.batcher.queue[0])} "
+                    f"pages per shard, free "
+                    f"{[a.n_free for a in self.batcher.allocs]}")
             return False
         for req in pre:
             self._advance_prefill(params, req)
         if dec:
             self._advance_decode(params, dec)
+        self.counters["engine_steps"] += 1
         return not self.batcher.idle
 
     def run(self, params) -> Dict[int, np.ndarray]:
@@ -629,3 +668,54 @@ class ContinuousEngine:
         while self.step(params):
             pass
         return self.batcher.results()
+
+    # --------------------------- snapshotting --------------------------- #
+    def state_dict(self) -> dict:
+        """Full serving state as a checkpointable pytree: the KV slabs
+        (payload + int8 scales), the device slot map, the host page
+        tables / page-stats history, and ONE variable-length uint8 leaf of
+        JSON bytes carrying all control-plane state (engine counters plus
+        the batcher's entire request lifecycle — see
+        ``Batcher.state_dict``). Encoding the control plane as bytes keeps
+        the tree STRUCTURE fixed (a ``ft.checkpoint.restore`` requirement)
+        while its shape tracks queue depth. Host arrays are copied so an
+        in-flight snapshot cannot be torn by subsequent steps; a snapshot
+        is only taken at step boundaries, where device + host state are
+        mutually consistent."""
+        ctl = {"counters": dict(self.counters),
+               "batcher": self.batcher.state_dict()}
+        blob = np.frombuffer(json.dumps(ctl).encode("utf-8"),
+                             np.uint8).copy()
+        return {"slabs": self.slabs,
+                "slot_pos": self.slot_pos,
+                "page_tables": self.page_tables.copy(),
+                "page_hist": self.page_hist.copy(),
+                "control": blob}
+
+    def load_state(self, tree: dict) -> None:
+        """Wholesale state replacement from a :meth:`state_dict` image
+        (same model + config; the mesh may be a different physical mesh of
+        the same "seq" extent — checkpoints are host numpy, re-placed
+        here). After this the engine continues exactly where the snapshot
+        was taken: greedy outputs match an uninterrupted run token-for-
+        token (exactly-once emission; tests/test_serve_ft.py)."""
+        slabs, slot_pos = tree["slabs"], tree["slot_pos"]
+        if self.n_shards > 1:
+            from jax.sharding import NamedSharding, PartitionSpec as P
+
+            sh = NamedSharding(self.mesh, P(self.seq_axis))
+            slabs = jax.device_put(
+                jax.tree.map(jnp.asarray, slabs), sh)
+            slot_pos = jax.device_put(jnp.asarray(slot_pos), sh)
+        else:
+            slabs = jax.tree.map(jnp.asarray, slabs)
+            slot_pos = jnp.asarray(slot_pos)
+        self.slabs = slabs
+        self.slot_pos = slot_pos
+        self.page_tables = np.asarray(tree["page_tables"],
+                                      np.int32).copy()
+        self.page_hist = np.asarray(tree["page_hist"], np.float64).copy()
+        ctl = json.loads(bytes(np.asarray(tree["control"],
+                                          np.uint8)).decode("utf-8"))
+        self.counters.update(ctl["counters"])
+        self.batcher.load_state(ctl["batcher"])

@@ -54,6 +54,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.scheduler import PAD_SENTINEL
+from repro.ft.faults import ResourceExhausted
 
 
 def _ceil_div(a: int, b: int) -> int:
@@ -138,6 +139,33 @@ class PagedLayout:
     def slot_local(self, s):
         """Shard-local slot index of logical slot ``s``."""
         return jnp.asarray(s, jnp.int32) % self.slots_per_shard
+
+    # ------------------------- variable footprint ---------------------- #
+    def pages_needed(self, total_positions: int) -> int:
+        """Physical pages a request writing positions ``[0, total)`` ever
+        touches. Touched logical slots are a PREFIX of the slot space
+        (positions below ``n_global`` map to slot ``p``; later positions
+        fill the ring in order until it wraps), so a short request —
+        ``total <= n_global + ring_cap`` — needs strictly fewer pages than
+        :attr:`pages_per_req`. This is what admission actually allocates;
+        the page table's unneeded tail entries stay on the null page."""
+        t = int(total_positions)
+        if t <= 0:
+            return 0
+        if t <= self.n_global:
+            return _ceil_div(t, self.page)
+        if t - self.n_global >= self.ring_cap:
+            return self.pages_per_req
+        return self.sink_pages + _ceil_div(t - self.n_global, self.page)
+
+    def pages_needed_per_shard(self, total_positions: int) -> List[int]:
+        """Split :meth:`pages_needed` over the contiguous page striping:
+        shard ``s`` owns logical pages ``[s*pps, (s+1)*pps)``, and the
+        touched-page prefix intersects each stripe in a prefix."""
+        need = self.pages_needed(total_positions)
+        pps = self.pages_per_shard
+        return [min(max(need - s * pps, 0), pps)
+                for s in range(self.shards)]
 
     # ------------------------------------------------------------------ #
     def slot(self, p):
@@ -329,7 +357,8 @@ class PageAllocator:
 
     def alloc(self, n: int) -> np.ndarray:
         if not self.can_alloc(n):
-            raise RuntimeError(f"page pool exhausted ({n} > {self.n_free})")
+            raise ResourceExhausted(
+                f"page pool exhausted ({n} > {self.n_free})")
         pages = [self._free.pop() for _ in range(n)]
         return np.asarray(pages, dtype=np.int32)
 

@@ -250,17 +250,20 @@ def test_allocator_contract():
     with pytest.raises(AssertionError):
         alloc.release(a[:1])  # double free
 
-def test_pool_too_small_raises():
+def test_pool_too_small_rejected_at_submit():
+    """A request whose footprint can NEVER fit the pool is rejected at
+    submit with a sizing message — the old behavior (accepted, then a
+    drain-time 'page pool too small' RuntimeError) is gone; requests whose
+    actual span fits a small pool now run (tests/test_serve_ft.py)."""
+    from repro.ft.faults import RejectedRequest
     cfg = get_smoke("smollm-135m")
     model = build_model(cfg)
     lay = PagedLayout(page=8, window=cfg.salo.window,
                       n_global=cfg.salo.n_global)
     eng = ContinuousEngine(model, ContinuousConfig(
         n_pages=lay.pages_per_req, page=8, chunk=8, max_batch=1))
-    eng.submit(np.arange(4, dtype=np.int32) + 1, 2)
-    params = model.init(jax.random.PRNGKey(6))
-    with pytest.raises(RuntimeError, match="page pool too small"):
-        eng.run(params)
+    with pytest.raises(RejectedRequest, match="can never fit"):
+        eng.submit(np.arange(40, dtype=np.int32) + 1, 8)
 
 
 def test_unsupported_programs_rejected():
