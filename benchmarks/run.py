@@ -18,7 +18,7 @@ def main() -> None:
                     help="skip the slow measured-speedup benchmarks")
     args = ap.parse_args()
 
-    from benchmarks import (dist_stats, paper_claims, plan_stats,
+    from benchmarks import (dist_stats, obs_stats, paper_claims, plan_stats,
                             serve_dist_stats, serve_stats)
 
     rows = []
@@ -35,6 +35,9 @@ def main() -> None:
     # Sequence-parallel serving: sharded slab + decode psum bytes + 8-shard
     # greedy parity (BENCH_serve_dist.json)
     serve_dist_stats.serve_dist_benchmark(rows, measure=not args.quick)
+    # Observability: zero-cost-when-disabled contract + traced overhead +
+    # lifecycle latency percentiles (BENCH_obs.json)
+    obs_stats.obs_benchmark(rows, measure=not args.quick)
     if not args.quick:
         paper_claims.fig7_speedup(rows)
         paper_claims.sec21_quadratic_scaling(rows)
@@ -130,6 +133,28 @@ def main() -> None:
         failures.append(("serve_recovery_preemptions",
                          d["serve/recovery_preemptions"],
                          "> 0 (preemption must engage)"))
+    # fairness: only the low priority class may be preempted or miss its
+    # armed deadline in the deterministic two-class scenario
+    if "serve/fair_low_pri_preemptions" in d and \
+            d["serve/fair_low_pri_preemptions"] <= 0:
+        failures.append(("serve_fair_preemptions",
+                         d["serve/fair_low_pri_preemptions"],
+                         "> 0 (low class preempted)"))
+    if "serve/fair_high_pri_miss_rate" in d and \
+            d["serve/fair_high_pri_miss_rate"] != 0.0:
+        failures.append(("serve_fair_high_pri_misses",
+                         d["serve/fair_high_pri_miss_rate"],
+                         "== 0 (high class never misses here)"))
+    # observability: disabled instrumentation must add ZERO jitted operands
+    # (jaxpr + launch-count identity) and full tracing at most 5% wall
+    for k in ("obs/decode_jaxpr_identical", "obs/launch_counts_identical",
+              "obs/token_parity", "obs/trace_lifecycle_complete"):
+        if k in d and d[k] != 1.0:
+            failures.append((k, d[k], "== 1.0"))
+    if "obs/traced_overhead" in d and \
+            d["obs/traced_overhead"] > obs_stats.OVERHEAD_GATE:
+        failures.append(("obs_traced_overhead", d["obs/traced_overhead"],
+                         f"<= {obs_stats.OVERHEAD_GATE} (tracing cost)"))
     # sequence parallelism: halo exchange must beat the all-gather ring on
     # EVERY workload (the (w+Bk)·d vs n·d claim), and the sharded engines
     # must be numerically identical to the single-device fused path

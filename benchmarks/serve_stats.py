@@ -40,6 +40,13 @@ and with ``measure``: an 8-shard (forced host devices, subprocess) int8 +
 page-sparse engine vs its single-device twin, gated token-exact — scales
 stripe with the pages and the keep mask comes from merged shard stats.
 
+Fairness (section ``fairness`` of the JSON, always collected): per-priority
+queue-wait percentiles, preemption counts, and deadline-miss rates, read
+from the engine's own metrics registry on a deterministic two-class
+scenario — a high-priority arrival preempting the low-priority decoder in
+a too-small pool, plus one already-due low-priority deadline. Gated: only
+the low class is preempted, only the low class misses its deadline.
+
 Fault-tolerant serving (section ``recovery`` of the JSON, always
 collected, tempdir snapshot dirs):
 
@@ -290,6 +297,64 @@ def _recovery_section(cfg, model, params) -> dict:
     }
 
 
+def _fairness_section(cfg, model, params) -> dict:
+    """Per-priority fairness stats, read from the engine's own metrics
+    registry (the observability layer): queue-wait percentiles, preemption
+    counts, and deadline-miss rates by priority class.
+
+    The scenario makes the priority mechanics observable deterministically:
+    a pool too small for two residents, so the high-priority arrival must
+    preempt the low-priority decoder; plus one low-priority request armed
+    with an already-due deadline, so exactly the low class records a miss.
+    """
+    from repro.models.layers import salo_pattern
+    from repro.obs import Observability
+    from repro.serve.engine import ContinuousConfig, ContinuousEngine
+    from repro.serve.paged_cache import layout_for_pattern
+
+    rng = np.random.default_rng(2)
+    obs = Observability()
+    lay = layout_for_pattern(salo_pattern(cfg, causal=True), PAGE)
+    eng = ContinuousEngine(model, ContinuousConfig(
+        n_pages=lay.pages_per_req, page=PAGE, chunk=CHUNK, max_batch=4),
+        obs=obs)
+    pa = rng.integers(0, cfg.vocab_size, (6,)).astype(np.int32)
+    pb = rng.integers(0, cfg.vocab_size, (5,)).astype(np.int32)
+    eng.submit(pa, 4, priority=0)
+    while not eng.batcher.assemble()[1]:      # drive the low-pri into decode
+        eng.step(params)
+    eng.submit(pb, 4, priority=1)             # preempts for its pages
+    eng.submit(rng.integers(0, cfg.vocab_size, (4,)).astype(np.int32), 4,
+               priority=0, deadline_s=0.0)    # already due -> certain miss
+    eng.run(params)
+
+    reg = obs.registry
+
+    def cnt(name, p):
+        try:
+            return int(reg.value(name, priority=p))
+        except KeyError:
+            return 0
+
+    by_priority = {}
+    for p in (0, 1):
+        sub = cnt("serve_requests_submitted", p)
+        miss = cnt("serve_deadline_miss", p)
+        wait = reg.percentiles("serve_queue_wait_s", qs=(0.5, 0.99),
+                               priority=p)
+        by_priority[str(p)] = {
+            "submitted": sub,
+            "finished": cnt("serve_requests_finished", p),
+            "preemptions": cnt("serve_preemptions", p),
+            "deadline_miss": miss,
+            "deadline_miss_rate": miss / sub if sub else 0.0,
+            "queue_wait_p50_s": wait["p50"],
+            "queue_wait_p99_s": wait["p99"],
+            "queue_wait_n": wait["count"],
+        }
+    return {"by_priority": by_priority}
+
+
 _QUANT_SHARD_PROG = """
     import os
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
@@ -413,6 +478,7 @@ def collect(measure: bool = True) -> dict:
         },
         "quant": _quant_section(cfg, model, params, prompts),
         "recovery": _recovery_section(cfg, model, params),
+        "fairness": _fairness_section(cfg, model, params),
     }
     if measure:
         data["quant"]["sharded"] = _measure_quant_shard_parity()
@@ -497,6 +563,18 @@ def serve_benchmark(rows, measure: bool = True,
                  "victims_evicted_then_reprefilled"))
     rows.append(("serve/recovery_exhaustion_recovered", ex["recovered"],
                  f"supervisor_restarts={ex['supervisor_restarts']}"))
+    fp = data["fairness"]["by_priority"]
+    rows.append(("serve/fair_low_pri_preemptions",
+                 float(fp["0"]["preemptions"]),
+                 "high_pri_arrival_evicts_low_pri_decoder"))
+    rows.append(("serve/fair_low_pri_miss_rate",
+                 fp["0"]["deadline_miss_rate"],
+                 f"missed={fp['0']['deadline_miss']}_of_"
+                 f"{fp['0']['submitted']}"))
+    rows.append(("serve/fair_high_pri_miss_rate",
+                 fp["1"]["deadline_miss_rate"],
+                 f"missed={fp['1']['deadline_miss']}_of_"
+                 f"{fp['1']['submitted']}"))
     if "throughput" in data:
         tp = data["throughput"]
         rows.append(("serve/ragged_throughput_speedup", tp["speedup"],
@@ -546,6 +624,18 @@ def main():
         bad.append(("serve/recovery_preemptions",
                     d["serve/recovery_preemptions"],
                     "> 0 (preemption must engage)"))
+    if d["serve/fair_low_pri_preemptions"] <= 0:
+        bad.append(("serve/fair_low_pri_preemptions",
+                    d["serve/fair_low_pri_preemptions"],
+                    "> 0 (only the low class is preemptible)"))
+    if d["serve/fair_low_pri_miss_rate"] <= 0.0:
+        bad.append(("serve/fair_low_pri_miss_rate",
+                    d["serve/fair_low_pri_miss_rate"],
+                    "> 0 (the armed low-pri deadline must register)"))
+    if d["serve/fair_high_pri_miss_rate"] != 0.0:
+        bad.append(("serve/fair_high_pri_miss_rate",
+                    d["serve/fair_high_pri_miss_rate"],
+                    "== 0 (high class never misses here)"))
     if bad:
         for b in bad:
             print(f"CHECK-FAILED: {b}", file=sys.stderr)

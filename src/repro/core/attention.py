@@ -37,6 +37,7 @@ import jax.numpy as jnp
 
 from repro.core.patterns import HybridSparsePattern
 from repro.core.blockwise import blockwise_attention, decode_attention
+from repro.obs.metrics import global_registry
 
 IMPLS = ("dense_ref", "blockwise", "pallas", "pallas_interpret")
 
@@ -68,6 +69,11 @@ def hybrid_attention(q: jax.Array, k: jax.Array, v: jax.Array,
     vf = v.reshape(B * H, N, D)
     assert qf.shape == kf.shape == vf.shape == (B * H, N, D), \
         "engines (incl. pallas) require the flat (B*H, N, D) layout"
+
+    # Trace-time call accounting (host-side, once per compilation — the
+    # dispatch-level complement of the per-launch accounting in
+    # kernels/ops.py; zero traced operands).
+    global_registry().inc("attention_trace_calls", impl=impl)
 
     # Sequence parallelism: when the active sharding rules map the "seq"
     # logical axis onto a mesh axis (long-context cells turn this on in

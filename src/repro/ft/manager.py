@@ -35,6 +35,7 @@ import jax
 
 from repro.ft.checkpoint import CheckpointManager
 from repro.ft.faults import RECOVERABLE, RestartsExhausted, StepCrash
+from repro.obs import Observability
 
 _BACKOFF_CAP_S = 30.0
 
@@ -81,7 +82,8 @@ def run_with_restarts(step_fn: Callable, state: Any, n_steps: int,
                       fail_at: Optional[set] = None,
                       watchdog: Optional[StragglerWatchdog] = None,
                       start_step: int = 0, max_restarts: int = 16,
-                      backoff: float = 0.0, recoverable=RECOVERABLE):
+                      backoff: float = 0.0, recoverable=RECOVERABLE,
+                      obs: Optional[Observability] = None):
     """Supervisor loop with checkpoint/restart semantics.
 
     ``step_fn(state, step) -> state``; ``fail_at``: steps at which to inject
@@ -91,9 +93,13 @@ def run_with_restarts(step_fn: Callable, state: Any, n_steps: int,
     ``backoff * 2**k`` (capped) and after ``max_restarts`` restarts the
     loop raises :class:`~repro.ft.faults.RestartsExhausted` chaining the
     last fault — a deterministically failing step can no longer spin
-    forever. Returns (state, history dict).
+    forever. ``obs``: checkpoint saves, faults, restores, and straggler
+    flags land on the tracer's ``ft`` track + the registry (the same event
+    vocabulary :class:`ServeSupervisor` emits). Returns (state, history
+    dict).
     """
     fail_at = set(fail_at or ())
+    obs = obs if obs is not None else Observability()
     history = {"restarts": 0, "straggler_events": 0, "steps_run": 0}
     step = start_step
     while step < n_steps:
@@ -102,16 +108,23 @@ def run_with_restarts(step_fn: Callable, state: Any, n_steps: int,
             if step in fail_at:
                 fail_at.discard(step)
                 raise StepCrash(f"injected failure at step {step}")
-            state = step_fn(state, step)
+            with obs.tracer.span("train.step", track="ft", step=step):
+                state = step_fn(state, step)
             dt = time.perf_counter() - t0
             if watchdog is not None and watchdog.observe(dt):
                 history["straggler_events"] += 1
+                obs.registry.inc("ft_straggler_events")
+                obs.tracer.instant("ft.straggler", track="ft", step=step,
+                                   step_time_s=round(dt, 6))
             history["steps_run"] += 1
             if checkpoint_every and (step + 1) % checkpoint_every == 0:
                 manager.save(state, step + 1)
-            step += 1
+                obs.tracer.instant("ft.snapshot", track="ft", step=step + 1)
         except recoverable as e:
             history["restarts"] += 1
+            obs.registry.inc("ft_faults", kind=type(e).__name__)
+            obs.tracer.instant("ft.fault", track="ft", step=step,
+                               kind=type(e).__name__, message=str(e))
             if history["restarts"] > max_restarts:
                 raise RestartsExhausted(
                     f"step fn still failing after {max_restarts} restarts "
@@ -122,6 +135,11 @@ def run_with_restarts(step_fn: Callable, state: Any, n_steps: int,
                 step = start_step  # no checkpoint yet: restart from scratch
             else:
                 state, step = restored, ck_step
+            obs.registry.inc("ft_restarts")
+            obs.tracer.instant("ft.restore", track="ft", step=step,
+                               restarts=history["restarts"])
+            continue
+        step += 1
     manager.wait()
     return state, history
 
@@ -154,7 +172,9 @@ class ServeSupervisor:
                  backoff: float = 0.0, keep: int = 3,
                  injector=None, watchdog: Optional[StragglerWatchdog] = None,
                  timer: Callable[[], float] = time.perf_counter,
-                 max_steps: Optional[int] = None):
+                 max_steps: Optional[int] = None,
+                 obs: Optional[Observability] = None,
+                 on_step: Optional[Callable[[Any, dict], None]] = None):
         self.make_engine = make_engine
         self.params = params
         self.manager = CheckpointManager(ckpt_dir, keep=keep,
@@ -166,12 +186,21 @@ class ServeSupervisor:
         self.watchdog = watchdog
         self.timer = timer
         self.max_steps = max_steps
+        # No explicit obs: adopt the first engine's bundle in _boot, so the
+        # supervisor's kill/restore timeline lands in the SAME exported
+        # trace as the engine's step spans (the whole point of the track).
+        self.obs = obs
+        self.on_step = on_step   # (engine, history) after every good step
 
     def _boot(self):
         engine = self.make_engine()
-        restored, _ = self.manager.restore_latest(engine.state_dict())
+        if self.obs is None:
+            self.obs = getattr(engine, "obs", None) or Observability()
+        restored, ck_step = self.manager.restore_latest(engine.state_dict())
         if restored is not None:
             engine.load_state(restored)
+            self.obs.registry.inc("ft_restores")
+            self.obs.tracer.instant("ft.restore", track="ft", step=ck_step)
         if self.injector is not None:
             self.injector.attach(engine)
         return engine
@@ -193,16 +222,27 @@ class ServeSupervisor:
                 dt = self.timer() - t0
                 if self.watchdog is not None and self.watchdog.observe(dt):
                     history["straggler_events"] += 1
+                    self.obs.registry.inc("ft_straggler_events")
+                    self.obs.tracer.instant("ft.straggler", track="ft",
+                                            step=step,
+                                            step_time_s=round(dt, 6))
                 history["steps_run"] += 1
                 done = engine.counters["engine_steps"]
                 if more and self.checkpoint_every \
                         and done % self.checkpoint_every == 0:
                     self.manager.save(engine.state_dict(), done)
+                    self.obs.tracer.instant("ft.snapshot", track="ft",
+                                            step=done)
+                if self.on_step is not None:
+                    self.on_step(engine, history)
                 if not more:
                     break
             except RECOVERABLE as e:
                 history["restarts"] += 1
                 history["faults"].append(f"{type(e).__name__}: {e}")
+                self.obs.tracer.instant("ft.fault", track="ft", step=step,
+                                        kind=type(e).__name__,
+                                        message=str(e))
                 if history["restarts"] > self.max_restarts:
                     raise RestartsExhausted(
                         f"serving still failing after {self.max_restarts} "
@@ -214,5 +254,14 @@ class ServeSupervisor:
                 history["steps_lost"] += lost
                 history["max_step_loss"] = max(history["max_step_loss"],
                                                lost)
+                # Counters AFTER _boot: load_state wholesale-restores a
+                # shared registry, so pre-restore increments would be wiped.
+                self.obs.registry.inc("ft_faults", kind=type(e).__name__)
+                self.obs.registry.inc("ft_restarts")
+                self.obs.registry.inc("ft_steps_lost", lost)
+                self.obs.tracer.instant("ft.restart", track="ft",
+                                        step=engine.counters["engine_steps"],
+                                        steps_lost=lost,
+                                        restarts=history["restarts"])
         self.manager.wait()
         return engine, history

@@ -38,6 +38,30 @@ from repro.core.scheduler import schedule
 from repro.kernels.salo_attention import salo_plan_attention
 from repro.kernels.salo_backward import (salo_plan_backward_dq,
                                          salo_plan_backward_dkv)
+from repro.obs.metrics import global_registry
+
+
+def _trace_accounting(kernel: str, plan, q, tiles: int) -> None:
+    """Launch / deduped-tile / estimated-HBM-byte accounting, unified into
+    the observability registry (the plan ``stats()`` numbers, recorded at
+    the point a launch is actually built).
+
+    This hook runs when JAX *traces* the wrapper — once per compilation,
+    host-side, zero traced operands — so the counters measure launch
+    STRUCTURE (launches per trace, tiles per launch, bytes per launch),
+    which is exactly what the plan benchmarks gate. Runtime launch volume
+    is the serving engine's job; it counts per executed step host-side.
+    Byte estimate per launch: every executed tile streams one K and one V
+    tile, every query block streams its Q tile in and its output tile out.
+    """
+    B, _, D = q.shape
+    itemsize = jnp.dtype(q.dtype).itemsize
+    est = B * itemsize * D * (2 * tiles * plan.block_k
+                              + 2 * plan.nq * plan.block_q)
+    reg = global_registry()
+    reg.inc("kernel_trace_launches", kernel=kernel)
+    reg.inc("kernel_trace_tiles", B * tiles, kernel=kernel)
+    reg.inc("kernel_trace_est_hbm_bytes", est, kernel=kernel)
 
 
 @functools.partial(jax.custom_vjp,
@@ -62,12 +86,16 @@ def _forward(q, k, v, pattern, block_q, block_k, scale, interpret):
     """One fused launch + host steps. Returns ``(out, (out_w, m, l))`` —
     the kernel's working-space partial triple, kept as backward residuals
     instead of being thrown away."""
-    if _use_fallback(interpret):
-        return _blockwise_forward(q, k, v, pattern, block_q, block_k, scale)
     B, N, D = q.shape
-    scale_ = (D ** -0.5) if scale is None else scale
     sched = schedule(pattern, N)
     plan = sched.plan(block_q, block_k)
+    fallback = _use_fallback(interpret)
+    _trace_accounting("blockwise_forward" if fallback
+                      else "salo_plan_attention", plan, q,
+                      int(plan.num_steps.sum()))
+    if fallback:
+        return _blockwise_forward(q, k, v, pattern, block_q, block_k, scale)
+    scale_ = (D ** -0.5) if scale is None else scale
     out_dtype = q.dtype
 
     # --- data reordering (paper §4.2) + tile-grid padding ---------------- #
@@ -102,6 +130,11 @@ def _bwd(pattern, block_q, block_k, scale, interpret, res, g):
     B, N, D = q.shape
     scale_ = (D ** -0.5) if scale is None else scale
     plan = schedule(pattern, N).plan(block_q, block_k)
+    fb = "_scan" if _use_fallback(interpret) else ""
+    _trace_accounting("salo_backward_dq" + fb, plan, q,
+                      int(plan.num_steps.sum()))
+    _trace_accounting("salo_backward_dkv" + fb, plan, q,
+                      int(plan.transposed().num_steps.sum()))
     if _use_fallback(interpret):
         # The forward ran on the XLA twin (same residual contract); run the
         # blockwise (XLA scan) gradient engines too — same plan walk, same

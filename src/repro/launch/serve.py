@@ -24,10 +24,17 @@ comma list of step attempts to crash (fault-injection demo):
 
   PYTHONPATH=src python -m repro.launch.serve --arch smollm-135m --smoke \\
       --engine continuous --snapshot-dir /tmp/snap --inject-crash-at 3,7
+
+``--trace-out trace.json`` records the engine's step-phase spans and every
+request's lifecycle events and writes Chrome trace-event JSON at exit
+(open in chrome://tracing or https://ui.perfetto.dev); ``--metrics-out``
+dumps the full metrics registry; ``--summary-every N`` prints a one-line
+stderr summary (steps, launches, TTFT/TPOT p50) every N engine steps.
 """
 from __future__ import annotations
 
 import argparse
+import sys
 import time
 
 import jax
@@ -36,6 +43,7 @@ import numpy as np
 
 from repro.configs import get_config, get_smoke
 from repro.models.model import build_model
+from repro.obs import Observability, summary_line
 from repro.serve.engine import (ContinuousConfig, ContinuousEngine,
                                 ServeConfig, ServeEngine)
 
@@ -96,6 +104,15 @@ def main(argv=None):
     ap.add_argument("--inject-crash-at", default=None,
                     help="comma list of step attempts at which to inject "
                          "a StepCrash (needs --snapshot-dir)")
+    ap.add_argument("--trace-out", default=None,
+                    help="write a Chrome trace-event JSON of engine phases "
+                         "+ request lifecycle here at exit (continuous "
+                         "engine; open in chrome://tracing / Perfetto)")
+    ap.add_argument("--metrics-out", default=None,
+                    help="write the full metrics-registry JSON here at exit")
+    ap.add_argument("--summary-every", type=int, default=0,
+                    help="print a one-line metrics summary to stderr every "
+                         "N engine steps (0 = off)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -103,6 +120,11 @@ def main(argv=None):
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(args.seed))
     rng = np.random.default_rng(args.seed)
+
+    if args.engine != "continuous" and (args.trace_out or args.metrics_out
+                                        or args.summary_every):
+        ap.error("--trace-out/--metrics-out/--summary-every need "
+                 "--engine continuous (the instrumented engine)")
 
     if args.engine == "continuous":
         if args.temperature != 0.0:
@@ -131,9 +153,18 @@ def main(argv=None):
             max_queue=args.max_queue)
         lens = _ragged_lengths(args.prompt_len, args.batch, rng)
         prompts = [rng.integers(0, cfg.vocab_size, (L,)) for L in lens]
+        # ONE obs bundle shared by the engine, the batcher, and the
+        # supervisor — and across supervisor restarts — so the exported
+        # trace holds the whole timeline including kills and restores.
+        obs = Observability(tracing=bool(args.trace_out))
+
+        def summarize(reg):
+            if args.summary_every and \
+                    reg.total("serve_engine_steps") % args.summary_every == 0:
+                print(f"# {summary_line(reg)}", file=sys.stderr, flush=True)
 
         def make_engine():
-            eng = ContinuousEngine(model, ccfg, mesh=mesh)
+            eng = ContinuousEngine(model, ccfg, mesh=mesh, obs=obs)
             for p in prompts:
                 eng.submit(p, args.new_tokens, deadline_s=args.deadline_s)
             return eng
@@ -148,7 +179,8 @@ def main(argv=None):
             sup = ServeSupervisor(
                 make_engine, params, args.snapshot_dir,
                 checkpoint_every=args.snapshot_every,
-                max_restarts=args.max_restarts, injector=injector)
+                max_restarts=args.max_restarts, injector=injector, obs=obs,
+                on_step=lambda eng, hist: summarize(obs.registry))
             eng, history = sup.run()
             results = eng.batcher.results()
             print(f"# supervisor: {history}")
@@ -158,7 +190,16 @@ def main(argv=None):
             if args.inject_crash_at:
                 ap.error("--inject-crash-at needs --snapshot-dir")
             eng = make_engine()
-            results = eng.run(params)
+            while eng.step(params):
+                summarize(obs.registry)
+            results = eng.batcher.results()
+        if args.trace_out:
+            obs.write_trace(args.trace_out)
+            print(f"# trace: {args.trace_out} "
+                  f"({len(obs.tracer)} events)", file=sys.stderr)
+        if args.metrics_out:
+            obs.write_metrics(args.metrics_out)
+            print(f"# metrics: {args.metrics_out}", file=sys.stderr)
         rids = sorted(results)
         dt = time.perf_counter() - t0
         total_new = args.batch * args.new_tokens

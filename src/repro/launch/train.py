@@ -7,10 +7,16 @@ Runs on whatever devices exist (`--data/--model` mesh dims), with the full
 production stack: SALO attention, sharding rules, grad clip + schedule,
 checkpoint manager (atomic/keep-k/async), straggler watchdog, restart-safe
 data stream.
+
+``--trace-out trace.json`` records per-step spans (+ checkpoint/straggler
+instants) and writes Chrome trace-event JSON at exit; ``--metrics-out``
+dumps the metrics registry (step-time histogram, token/step counters,
+kernel trace-time launch accounting).
 """
 from __future__ import annotations
 
 import argparse
+import sys
 import time
 
 import jax
@@ -24,6 +30,8 @@ from repro.ft.checkpoint import CheckpointManager
 from repro.ft.manager import StragglerWatchdog
 from repro.launch.mesh import make_host_mesh
 from repro.models.model import build_model
+from repro.obs import Observability
+from repro.obs.metrics import global_registry
 from repro.optim import adamw
 from repro.optim.schedule import Schedule
 from repro.train.trainer import TrainConfig, make_train_step
@@ -51,6 +59,11 @@ def main(argv=None):
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--data-branch", type=int, default=16)
     ap.add_argument("--data-docs", type=int, default=64)
+    ap.add_argument("--trace-out", default=None,
+                    help="write Chrome trace-event JSON of the step "
+                         "timeline here at exit (chrome://tracing/Perfetto)")
+    ap.add_argument("--metrics-out", default=None,
+                    help="write the full metrics-registry JSON here at exit")
     args = ap.parse_args(argv)
 
     cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
@@ -96,15 +109,26 @@ def main(argv=None):
                                      branch=args.data_branch,
                                      n_docs=args.data_docs))
     wd = StragglerWatchdog()
+    obs = Observability(tracing=bool(args.trace_out))
+    reg = obs.registry
 
     with mesh:
         for i in range(start, args.steps):
             t0 = time.perf_counter()
-            batch = {k: jnp.asarray(v) for k, v in ds.batch(i).items()}
-            params, opt, metrics, ef = step(params, opt, batch, ef)
-            loss = float(metrics["loss"])
+            with obs.tracer.span("train.step", track="train", step=i):
+                batch = {k: jnp.asarray(v)
+                         for k, v in ds.batch(i).items()}
+                params, opt, metrics, ef = step(params, opt, batch, ef)
+                loss = float(metrics["loss"])   # host sync inside the span
             dt = time.perf_counter() - t0
+            reg.inc("train_steps")
+            reg.inc("train_tokens", args.batch * args.seq)
+            reg.observe("train_step_s", dt)
             straggler = wd.observe(dt)
+            if straggler:
+                reg.inc("ft_straggler_events")
+                obs.tracer.instant("ft.straggler", track="ft", step=i,
+                                   step_time_s=round(dt, 6))
             if i % args.log_every == 0 or i == args.steps - 1:
                 toks = args.batch * args.seq / dt
                 print(f"step {i:5d} loss {loss:8.4f} "
@@ -113,10 +137,23 @@ def main(argv=None):
                       + (" [straggler]" if straggler else ""), flush=True)
             if mgr and (i + 1) % args.ckpt_every == 0:
                 mgr.save({"params": params, "opt": opt}, i + 1)
+                obs.tracer.instant("ft.snapshot", track="ft", step=i + 1)
     if mgr:
         mgr.save({"params": params, "opt": opt}, args.steps)
         mgr.wait()
-    print(f"# done: final loss {loss:.4f}, straggler events {wd.events}")
+    if args.trace_out:
+        obs.write_trace(args.trace_out)
+        print(f"# trace: {args.trace_out} ({len(obs.tracer)} events)",
+              file=sys.stderr)
+    if args.metrics_out:
+        # Fold in the process-wide kernel trace-time launch accounting so
+        # the dump is the complete picture for this run.
+        reg.merge(global_registry().snapshot())
+        obs.write_metrics(args.metrics_out)
+        print(f"# metrics: {args.metrics_out}", file=sys.stderr)
+    st = reg.percentiles("train_step_s")
+    print(f"# done: final loss {loss:.4f}, straggler events {wd.events}, "
+          f"step p50 {st['p50'] * 1e3:.1f} ms")
     return loss
 
 

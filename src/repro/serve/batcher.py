@@ -41,6 +41,14 @@ Robust-serving semantics (the fault-tolerance control plane):
   the ENTIRE lifecycle (queue, rows, finished, allocator free lists in
   exact order, counters), riding the engine snapshot so a restored run
   replays deterministically.
+* **Observability** — every lifecycle transition (submitted -> admitted ->
+  first token -> preempted/expired/finished) emits a trace event on the
+  ``requests`` track and feeds the metrics registry: queue-wait, TTFT and
+  per-output-token latency histograms plus preemption / deadline-miss /
+  completion counters, all labeled by priority class (the per-tenant
+  fairness story in BENCH_serve.json). Timestamps ride the batcher's
+  injectable ``clock`` — the same one deadlines use — and survive
+  snapshot/restore as relative offsets, like deadlines do.
 """
 from __future__ import annotations
 
@@ -51,6 +59,7 @@ from typing import Callable, Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.ft.faults import QueueFull, RejectedRequest
+from repro.obs import Observability
 from repro.serve.paged_cache import PageAllocator, PagedLayout
 
 WAITING, PREFILL, DECODE, DONE, FAILED = (
@@ -71,6 +80,13 @@ class Request:
     out: List[int] = dataclasses.field(default_factory=list)
     error: Optional[str] = None   # failure reason in FAILED state
     preemptions: int = 0
+    # Lifecycle timestamps on the batcher's clock (observability):
+    # ``submit_ts`` anchors TTFT, ``wait_since`` anchors the current
+    # queue-wait (reset on preemption requeue), ``last_token_ts`` anchors
+    # per-output-token latency. Snapshots carry them as relative offsets.
+    submit_ts: Optional[float] = None
+    wait_since: Optional[float] = None
+    last_token_ts: Optional[float] = None
 
     @property
     def prompt_len(self) -> int:
@@ -125,7 +141,8 @@ class Batcher:
 
     def __init__(self, layout: PagedLayout, n_pages: int, max_batch: int,
                  max_queue: Optional[int] = None,
-                 clock: Callable[[], float] = time.monotonic):
+                 clock: Callable[[], float] = time.monotonic,
+                 obs: Optional[Observability] = None):
         # One allocator per sequence shard (layout.shards == 1 -> exactly
         # the single-pool engine): a request takes its per-shard page needs
         # (:meth:`PagedLayout.pages_needed_per_shard`) from each shard's
@@ -146,6 +163,20 @@ class Batcher:
         self._next_rid = 0
         self.preemptions = 0
         self.expired = 0
+        self.obs = obs if obs is not None else Observability()
+
+    # --------------------------- observability ------------------------- #
+    def _event(self, name: str, req: Request, **args) -> None:
+        self.obs.tracer.instant(name, track="requests", rid=req.rid,
+                                priority=req.priority, **args)
+
+    def _observe_wait(self, req: Request) -> float:
+        """Record the queue wait ending now (admission); returns it."""
+        wait = (0.0 if req.wait_since is None
+                else max(self.clock() - req.wait_since, 0.0))
+        self.obs.registry.observe("serve_queue_wait_s", wait,
+                                  priority=req.priority)
+        return wait
 
     # ------------------------------- intake ---------------------------- #
     def submit(self, prompt, max_new: int, priority: int = 0,
@@ -162,6 +193,7 @@ class Batcher:
         needs = self.layout.pages_needed_per_shard(total)
         usable = self.n_pages - 1     # page 0 is the reserved null page
         if max(needs) > usable:
+            self.obs.registry.inc("serve_requests_rejected")
             raise RejectedRequest(
                 f"request can never fit: prompt_len={prompt.size} + "
                 f"max_new={max_new} spans {total} positions needing "
@@ -169,15 +201,21 @@ class Batcher:
                 f"but each pool holds only {usable} usable pages — resize "
                 f"n_pages or split the request")
         if self.max_queue is not None and len(self.queue) >= self.max_queue:
+            self.obs.registry.inc("serve_queue_full")
             raise QueueFull(
                 f"admission queue full ({len(self.queue)} waiting, "
                 f"max_queue={self.max_queue})")
         rid = self._next_rid
         self._next_rid += 1
-        self.queue.append(Request(
+        now = self.clock()
+        req = Request(
             rid=rid, prompt=prompt, max_new=max_new, priority=priority,
-            deadline=(None if deadline_s is None
-                      else self.clock() + deadline_s)))
+            deadline=(None if deadline_s is None else now + deadline_s),
+            submit_ts=now, wait_since=now)
+        self.queue.append(req)
+        self.obs.registry.inc("serve_requests_submitted", priority=priority)
+        self._event("request.submitted", req, prompt_len=int(prompt.size),
+                    max_new=max_new)
         return rid
 
     # ----------------------------- admission --------------------------- #
@@ -222,6 +260,11 @@ class Batcher:
             req.prefilled = 0
             self.rows[row] = req
             admitted.append(req)
+            wait = self._observe_wait(req)
+            self.obs.registry.inc("serve_requests_admitted",
+                                  priority=req.priority)
+            self._event("request.admitted", req, row=row,
+                        queue_wait_s=round(wait, 6))
         return admitted
 
     def maybe_preempt(self) -> int:
@@ -259,7 +302,10 @@ class Batcher:
         req.prefilled = 0
         req.preemptions += 1
         self.preemptions += 1
+        req.wait_since = self.clock()   # queue wait restarts at eviction
         self.queue.append(req)
+        self.obs.registry.inc("serve_preemptions", priority=req.priority)
+        self._event("request.preempted", req, emitted=len(req.out))
 
     # ---------------------------- assembly ----------------------------- #
     def assemble(self) -> Tuple[List[Request], List[Request]]:
@@ -277,8 +323,15 @@ class Batcher:
         would double-emit, so it goes straight back to the decode cohort
         (exactly-once emission)."""
         assert req.state == PREFILL and req.prefilled == req.prefill_len
+        now = self.clock()
         if not req.out:
             req.out.append(int(first_token))
+            ttft = (max(now - req.submit_ts, 0.0)
+                    if req.submit_ts is not None else 0.0)
+            self.obs.registry.observe("serve_ttft_s", ttft,
+                                      priority=req.priority)
+            self._event("request.first_token", req, ttft_s=round(ttft, 6))
+        req.last_token_ts = now
         if req.done:
             self.finish(req)
         else:
@@ -287,6 +340,12 @@ class Batcher:
     def record_token(self, req: Request, token: int) -> None:
         assert req.state == DECODE
         req.out.append(int(token))
+        now = self.clock()
+        if req.last_token_ts is not None:
+            self.obs.registry.observe(
+                "serve_tpot_s", max(now - req.last_token_ts, 0.0),
+                priority=req.priority)
+        req.last_token_ts = now
         if req.done:
             self.finish(req)
 
@@ -308,6 +367,10 @@ class Batcher:
         req.state = DONE
         self._release(req)
         self.finished[req.rid] = req
+        self.obs.registry.inc("serve_requests_finished",
+                              priority=req.priority)
+        self._event("request.finished", req, n_out=len(req.out),
+                    preemptions=req.preemptions)
 
     def expire(self) -> List[Request]:
         """Deadline sweep: move every overdue request — queued or running —
@@ -328,6 +391,9 @@ class Batcher:
             self.finished[req.rid] = req
             self.expired += 1
             out.append(req)
+            self.obs.registry.inc("serve_deadline_miss",
+                                  priority=req.priority)
+            self._event("request.expired", req, emitted=len(req.out))
         return out
 
     # --------------------------- snapshotting --------------------------- #
@@ -337,6 +403,9 @@ class Batcher:
         process's clock; allocator free lists keep their exact order so a
         restored run hands out the same physical pages (determinism)."""
         now = self.clock()
+
+        def rel(t: Optional[float]) -> Optional[float]:
+            return None if t is None else t - now
 
         def enc(req: Optional[Request]):
             if req is None:
@@ -349,7 +418,10 @@ class Batcher:
                     "pages": (None if req.pages is None
                               else req.pages.tolist()),
                     "prefilled": req.prefilled, "out": list(req.out),
-                    "error": req.error, "preemptions": req.preemptions}
+                    "error": req.error, "preemptions": req.preemptions,
+                    "submit_rel": rel(req.submit_ts),
+                    "wait_since_rel": rel(req.wait_since),
+                    "last_token_rel": rel(req.last_token_ts)}
 
         return {"queue": [enc(q) for q in self.queue],
                 "rows": [enc(q) for q in self.rows],
@@ -361,6 +433,11 @@ class Batcher:
 
     def load_state(self, st: dict) -> None:
         now = self.clock()
+
+        def abs_(r: Optional[float]) -> Optional[float]:
+            # old snapshots have no timestamp keys -> None (metrics that
+            # need them degrade gracefully, nothing else changes)
+            return None if r is None else now + r
 
         def dec(d):
             if d is None:
@@ -374,7 +451,10 @@ class Batcher:
                 pages=(None if d["pages"] is None
                        else np.asarray(d["pages"], np.int32)),
                 prefilled=d["prefilled"], out=list(d["out"]),
-                error=d["error"], preemptions=d["preemptions"])
+                error=d["error"], preemptions=d["preemptions"],
+                submit_ts=abs_(d.get("submit_rel")),
+                wait_since=abs_(d.get("wait_since_rel")),
+                last_token_ts=abs_(d.get("last_token_rel")))
 
         self.queue = [dec(d) for d in st["queue"]]
         self.rows = [dec(d) for d in st["rows"]]

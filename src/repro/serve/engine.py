@@ -20,6 +20,7 @@ from __future__ import annotations
 import dataclasses
 import json
 import time
+from collections.abc import MutableMapping
 from functools import partial
 from typing import Callable, Dict, Optional
 
@@ -29,6 +30,44 @@ import numpy as np
 
 from repro.ft.faults import ResourceExhausted
 from repro.models.model import Model
+from repro.obs import Observability
+
+
+class CountersView(MutableMapping):
+    """The old ``ContinuousEngine.counters`` dict, now a live view over
+    registry counters (``serve_<key>``). Every historical access pattern
+    keeps working — ``counters["x"] += 1``, ``dict(counters)``,
+    ``counters.update(snapshot)`` — while the values live in the metrics
+    registry alongside everything else observability collects."""
+
+    KEYS = ("prefill_launches", "decode_launches", "prefill_tokens",
+            "decode_tokens", "decode_pages_read", "decode_pages_total",
+            "engine_steps")
+
+    def __init__(self, registry):
+        self._reg = registry
+
+    def __getitem__(self, key: str) -> int:
+        if key not in self.KEYS:
+            raise KeyError(key)
+        return int(self._reg.value("serve_" + key))
+
+    def __setitem__(self, key: str, value) -> None:
+        if key not in self.KEYS:
+            raise KeyError(key)
+        self._reg.set_counter("serve_" + key, int(value))
+
+    def __delitem__(self, key: str) -> None:
+        raise TypeError("engine counters are a fixed set")
+
+    def __iter__(self):
+        return iter(self.KEYS)
+
+    def __len__(self) -> int:
+        return len(self.KEYS)
+
+    def __repr__(self) -> str:
+        return repr(dict(self))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -156,7 +195,8 @@ class ContinuousEngine:
 
     def __init__(self, model: Model, ccfg: ContinuousConfig, mesh=None,
                  seq_axis: str = "seq",
-                 clock: Optional[Callable[[], float]] = None):
+                 clock: Optional[Callable[[], float]] = None,
+                 obs: Optional[Observability] = None):
         from repro.models import layers as L
         from repro.models import transformer as T
         from repro.serve.batcher import Batcher
@@ -187,11 +227,17 @@ class ContinuousEngine:
         self.pattern = L.salo_pattern(cfg, causal=True)
         if self.pattern.is_2d or not self.pattern.causal:
             raise NotImplementedError("continuous serving: causal 1-D only")
+        # Observability: registry always live (the engine counters ARE
+        # registry counters), tracing opt-in. All hooks are host-side —
+        # see the zero-jitted-operand contract in repro.obs.
+        self.obs = obs if obs is not None else Observability()
+        self.tracer = self.obs.tracer
+        self.registry = self.obs.registry
         self.layout = layout_for_pattern(self.pattern, ccfg.page,
                                          shards=self.n_shards)
         self.batcher = Batcher(self.layout, ccfg.n_pages, ccfg.max_batch,
                                max_queue=ccfg.max_queue,
-                               clock=clock or time.monotonic)
+                               clock=clock or time.monotonic, obs=self.obs)
         self.batcher.on_finish = self._release_hook
 
         lay = self.layout
@@ -227,10 +273,21 @@ class ContinuousEngine:
             self.slot_pos = empty_positions(ccfg.max_batch, lay)
         self.page_tables = np.zeros((ccfg.max_batch, lay.pages_per_req),
                                     np.int32)
-        self.counters = {"prefill_launches": 0, "decode_launches": 0,
-                         "prefill_tokens": 0, "decode_tokens": 0,
-                         "decode_pages_read": 0, "decode_pages_total": 0,
-                         "engine_steps": 0}
+        self.counters = CountersView(self.registry)
+        for key in CountersView.KEYS:
+            self.registry.counter("serve_" + key)
+        # Per-launch estimated HBM traffic of the KV slab reads (pages
+        # actually read x page bytes across all layers) — the byte half of
+        # the paper's tile/launch/byte accounting, at serving granularity.
+        kv_itemsize = 1 if self.quantized else jnp.dtype(
+            cfg.compute_dtype).itemsize
+        self._page_read_bytes = (2 * sum(n for _, n in model.program)
+                                 * ccfg.page * cfg.n_kv_heads * cfg.hd
+                                 * kv_itemsize)
+        # Quantization effectiveness as a registry gauge (once, at init —
+        # int8 slabs show ~4x fewer resident bytes than the compute dtype).
+        self.registry.set("serve_slab_resident_bytes",
+                          self.slab_resident_bytes())
         if self.n_shards > 1:
             self._chunk_jit = jax.jit(self._chunk_sharded)
             self._decode_jit = jax.jit(self._decode_sharded)
@@ -543,6 +600,8 @@ class ContinuousEngine:
                 jnp.asarray(phys), jnp.asarray(off))
         self.counters["prefill_launches"] += 1
         self.counters["prefill_tokens"] += clen
+        self.registry.inc("serve_prefill_tiles",
+                          plan.stats()["executed_tiles"])
         req.prefilled = c1
         if c1 == P:
             first = int(np.argmax(np.asarray(logits[clen - 1])))
@@ -604,23 +663,31 @@ class ContinuousEngine:
             keep = self._page_keep_mask(t_vec, active)
             keep_dev = (keep.reshape(R, S, lay.pages_per_shard)
                         .transpose(1, 0, 2).copy() if S > 1 else keep)
-            logits, self.slabs, self.slot_pos, page_m = self._decode_jit(
-                *args, jnp.asarray(keep_dev))
-            if S > 1:
-                page_m = np.asarray(page_m).transpose(1, 0, 2).reshape(
-                    R, lay.pages_per_req)
-            self._update_page_stats(np.asarray(page_m), active)
+            with self.tracer.span("ragged_decode", cohort=len(reqs)):
+                logits, self.slabs, self.slot_pos, page_m = self._decode_jit(
+                    *args, jnp.asarray(keep_dev))
+                logits = np.asarray(logits)   # span covers the host sync
+            with self.tracer.span("page_stats_fold"):
+                if S > 1:
+                    page_m = np.asarray(page_m).transpose(1, 0, 2).reshape(
+                        R, lay.pages_per_req)
+                self._update_page_stats(np.asarray(page_m), active)
             pages_read = int(keep[active].sum())
         else:
-            logits, self.slabs, self.slot_pos = self._decode_jit(*args)
+            with self.tracer.span("ragged_decode", cohort=len(reqs)):
+                logits, self.slabs, self.slot_pos = self._decode_jit(*args)
+                logits = np.asarray(logits)
             pages_read = len(reqs) * lay.pages_per_req
         self.counters["decode_launches"] += 1
         self.counters["decode_tokens"] += len(reqs)
         self.counters["decode_pages_read"] += pages_read
         self.counters["decode_pages_total"] += len(reqs) * lay.pages_per_req
-        logits = np.asarray(logits)
-        for req in reqs:
-            self.batcher.record_token(req, int(np.argmax(logits[req.row])))
+        self.registry.inc("serve_decode_est_hbm_bytes",
+                          pages_read * self._page_read_bytes)
+        with self.tracer.span("sample", cohort=len(reqs)):
+            for req in reqs:
+                self.batcher.record_token(req,
+                                          int(np.argmax(logits[req.row])))
 
     def slab_resident_bytes(self) -> int:
         """Actual bytes of the pooled KV slabs (all segments, K+V, plus
@@ -641,25 +708,30 @@ class ContinuousEngine:
         exhaustion window), the step raises the RECOVERABLE
         :class:`~repro.ft.faults.ResourceExhausted` — the supervisor
         retries instead of the old drain-time dead-end ``RuntimeError``."""
-        self.batcher.expire()
-        self._admit()
-        if self.batcher.queue and self.ccfg.preempt \
-                and self.batcher.maybe_preempt():
-            self._admit()
-        pre, dec = self.batcher.assemble()
-        if not pre and not dec:
-            if self.batcher.queue:
-                raise ResourceExhausted(
-                    "admission stalled with nothing in flight: head of "
-                    f"queue needs {self.batcher._shard_needs(self.batcher.queue[0])} "
-                    f"pages per shard, free "
-                    f"{[a.n_free for a in self.batcher.allocs]}")
-            return False
-        for req in pre:
-            self._advance_prefill(params, req)
-        if dec:
-            self._advance_decode(params, dec)
-        self.counters["engine_steps"] += 1
+        trc = self.tracer
+        with trc.span("engine.step", step=self.counters["engine_steps"]):
+            with trc.span("assemble"):
+                self.batcher.expire()
+                self._admit()
+                if self.batcher.queue and self.ccfg.preempt \
+                        and self.batcher.maybe_preempt():
+                    self._admit()
+                pre, dec = self.batcher.assemble()
+            if not pre and not dec:
+                if self.batcher.queue:
+                    raise ResourceExhausted(
+                        "admission stalled with nothing in flight: head of "
+                        f"queue needs {self.batcher._shard_needs(self.batcher.queue[0])} "
+                        f"pages per shard, free "
+                        f"{[a.n_free for a in self.batcher.allocs]}")
+                return False
+            for req in pre:
+                with trc.span("chunk_prefill", rid=req.rid,
+                              prefilled=req.prefilled):
+                    self._advance_prefill(params, req)
+            if dec:
+                self._advance_decode(params, dec)
+            self.counters["engine_steps"] += 1
         return not self.batcher.idle
 
     def run(self, params) -> Dict[int, np.ndarray]:
@@ -674,16 +746,18 @@ class ContinuousEngine:
         """Full serving state as a checkpointable pytree: the KV slabs
         (payload + int8 scales), the device slot map, the host page
         tables / page-stats history, and ONE variable-length uint8 leaf of
-        JSON bytes carrying all control-plane state (engine counters plus
-        the batcher's entire request lifecycle — see
-        ``Batcher.state_dict``). Encoding the control plane as bytes keeps
+        JSON bytes carrying all control-plane state (the metrics registry —
+        engine counters included — plus the batcher's entire request
+        lifecycle, see ``Batcher.state_dict``). Encoding the control plane
+        as bytes keeps
         the tree STRUCTURE fixed (a ``ft.checkpoint.restore`` requirement)
         while its shape tracks queue depth. Host arrays are copied so an
         in-flight snapshot cannot be torn by subsequent steps; a snapshot
         is only taken at step boundaries, where device + host state are
         mutually consistent."""
         ctl = {"counters": dict(self.counters),
-               "batcher": self.batcher.state_dict()}
+               "batcher": self.batcher.state_dict(),
+               "metrics": self.registry.state_dict()}
         blob = np.frombuffer(json.dumps(ctl).encode("utf-8"),
                              np.uint8).copy()
         return {"slabs": self.slabs,
@@ -718,4 +792,6 @@ class ContinuousEngine:
         ctl = json.loads(bytes(np.asarray(tree["control"],
                                           np.uint8)).decode("utf-8"))
         self.counters.update(ctl["counters"])
-        self.batcher.load_state(ctl["batcher"])
+        if "metrics" in ctl:   # full-registry image; absent in pre-obs
+            self.registry.load_state(ctl["metrics"])   # snapshots, whose
+        self.batcher.load_state(ctl["batcher"])        # counters loaded above

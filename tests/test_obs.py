@@ -1,0 +1,364 @@
+"""Observability layer: metrics registry (labeled counters / gauges /
+log-bucketed histograms, mergeable snapshots), span tracer (ring buffer,
+injectable clock, Chrome-trace export), engine/batcher instrumentation
+(lifecycle latency metrics, counters-dict compatibility, snapshot
+round-trip incl. old-format snapshots), and FT event plumbing.
+
+The two hard contracts pinned here and gated in benchmarks/obs_stats.py:
+disabled observability adds nothing to any jitted computation, and the
+registry rides the engine snapshot/restore path exactly as the old
+``counters`` dict did."""
+import json
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke
+from repro.models.model import build_model
+from repro.obs import (MetricsRegistry, Observability, Tracer,
+                       merge_snapshots, summary_line, validate_chrome_trace)
+from repro.obs.metrics import BASE, bucket_index
+from repro.obs.trace import NULL_TRACER
+from repro.serve.engine import ContinuousConfig, ContinuousEngine
+
+RNG = np.random.default_rng(7)
+
+
+@pytest.fixture(scope="module")
+def stack():
+    cfg = get_smoke("smollm-135m")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    from repro.models.layers import salo_pattern
+    from repro.serve.paged_cache import layout_for_pattern
+    lay = layout_for_pattern(salo_pattern(cfg, causal=True), 8)
+    return cfg, model, params, lay
+
+
+def _engine(model, lay, *, max_batch=4, obs=None, n_pages=None):
+    return ContinuousEngine(model, ContinuousConfig(
+        n_pages=n_pages or 1 + max_batch * lay.pages_per_req, page=8,
+        chunk=8, max_batch=max_batch), obs=obs)
+
+
+# ============================ registry ================================== #
+def test_registry_counters_gauges_labels():
+    reg = MetricsRegistry()
+    reg.inc("steps")
+    reg.inc("steps", 2)
+    assert reg.value("steps") == 3
+    reg.inc("finished", priority=0)
+    reg.inc("finished", priority=1)
+    reg.inc("finished", priority=1)
+    assert reg.value("finished", priority=0) == 1
+    assert reg.value("finished", priority=1) == 2
+    assert reg.total("finished") == 3
+    reg.set("resident", 7.0)
+    reg.set("resident", 5.0)           # gauges overwrite
+    assert reg.value("resident") == 5.0
+    # label mismatch and kind re-declaration are hard errors
+    with pytest.raises(ValueError):
+        reg.inc("finished", tenant="a")
+    with pytest.raises(ValueError):
+        reg.set("steps", 1.0)
+
+
+def test_histogram_percentiles_nearest_rank():
+    reg = MetricsRegistry()
+    for v in (0.01, 0.02, 0.03, 0.5):
+        reg.observe("lat", v)
+    p = reg.percentiles("lat", qs=(0.5, 0.99))
+    # nearest-rank: p99 of 4 samples is the max sample's bucket, and the
+    # estimate is clamped to the exact observed [min, max]
+    assert abs(p["p50"] - 0.02) / 0.02 < 0.25
+    assert abs(p["p99"] - 0.5) / 0.5 < 0.25
+    assert p["count"] == 4
+    assert p["mean"] == pytest.approx(0.14)
+    h = reg.merged_hist("lat")
+    assert h.min == 0.01 and h.max == 0.5
+    # every estimate stays within one bucket width of the true quantile
+    for q in (0.1, 0.5, 0.9):
+        est = h.percentile(q)
+        assert 0.01 <= est <= 0.5
+    # empty histogram: NaN percentiles, zero count
+    empty = reg.percentiles("never_observed_family_x")
+    assert math.isnan(empty["p50"]) and empty["count"] == 0
+
+
+def test_bucket_index_resolution():
+    # adjacent bucket edges differ by BASE (~19%) — the resolution claim
+    for x in (1e-6, 0.004, 1.0, 37.5):
+        i = bucket_index(x)
+        assert BASE ** i <= x < BASE ** (i + 1)
+
+
+def _random_snapshot(rng):
+    reg = MetricsRegistry()
+    for _ in range(rng.integers(1, 5)):
+        reg.inc("c", float(rng.integers(1, 10)), shard=int(rng.integers(3)))
+    reg.set("g", float(rng.integers(100)))
+    for _ in range(int(rng.integers(1, 20))):
+        reg.observe("h", float(rng.uniform(1e-4, 10.0)))
+    return reg.snapshot()
+
+
+def test_merge_snapshots_associative_commutative():
+    snaps = [_random_snapshot(RNG) for _ in range(3)]
+    a, b, c = snaps
+    left = merge_snapshots(merge_snapshots(a, b), c)
+    right = merge_snapshots(a, merge_snapshots(b, c))
+    assert left == right
+    assert merge_snapshots(a, b) == merge_snapshots(b, a)
+    # counters add, gauges max, histogram counts add
+    m = merge_snapshots(a, b)
+    ca = sum(a["c"]["cells"].values())
+    cb = sum(b["c"]["cells"].values())
+    assert sum(m["c"]["cells"].values()) == pytest.approx(ca + cb)
+    ga = list(a["g"]["cells"].values())[0]
+    gb = list(b["g"]["cells"].values())[0]
+    assert list(m["g"]["cells"].values())[0] == max(ga, gb)
+    ha = list(a["h"]["cells"].values())[0]["count"]
+    hb = list(b["h"]["cells"].values())[0]["count"]
+    assert list(m["h"]["cells"].values())[0]["count"] == ha + hb
+
+
+def test_registry_state_roundtrip_exact():
+    snap = _random_snapshot(RNG)
+    reg = MetricsRegistry()
+    reg.load_state(snap)
+    assert reg.state_dict() == snap
+    # and the image is pure JSON
+    assert json.loads(json.dumps(snap)) == snap
+
+
+# ============================= tracer =================================== #
+def _fake_clock():
+    t = [0.0]
+
+    def clock():
+        t[0] += 0.001
+        return t[0]
+    return clock
+
+
+def test_tracer_nested_spans_and_chrome_export():
+    trc = Tracer(clock=_fake_clock())
+    with trc.span("outer", step=0):
+        with trc.span("inner"):
+            pass
+        trc.instant("mark", kind="x")
+    trc.counter("queue_depth", 3)
+    evs = trc.events()
+    by = {e["name"]: e for e in evs}
+    # inner closes first (ring holds completion order) and nests deeper
+    assert [e["name"] for e in evs] == ["inner", "mark", "outer",
+                                       "queue_depth"]
+    assert by["inner"]["depth"] == 1 and by["outer"]["depth"] == 0
+    # containment: inner's interval inside outer's
+    o, i = by["outer"], by["inner"]
+    assert o["ts"] <= i["ts"] and i["ts"] + i["dur"] <= o["ts"] + o["dur"]
+    doc = trc.to_chrome_trace()
+    validate_chrome_trace(doc)
+    phases = {e["name"]: e["ph"] for e in doc["traceEvents"]
+              if e["ph"] != "M"}
+    assert phases == {"outer": "X", "inner": "X", "mark": "i",
+                      "queue_depth": "C"}
+
+
+def test_tracer_deterministic_under_fake_clock():
+    def run():
+        trc = Tracer(clock=_fake_clock())
+        with trc.span("a", step=1):
+            trc.instant("b")
+        return trc.to_json()
+    assert run() == run()
+
+
+def test_tracer_ring_eviction():
+    trc = Tracer(capacity=4, clock=_fake_clock())
+    for i in range(10):
+        trc.instant(f"e{i}")
+    assert len(trc) == 4
+    assert trc.dropped == 6
+    assert [e["name"] for e in trc.events()] == ["e6", "e7", "e8", "e9"]
+    validate_chrome_trace(trc.to_chrome_trace())
+
+
+def test_disabled_tracer_is_noop():
+    assert not NULL_TRACER.enabled
+    with NULL_TRACER.span("x"):
+        NULL_TRACER.instant("y")
+    NULL_TRACER.counter("z", 1)
+    assert len(NULL_TRACER) == 0
+    # exception safety: a raising body still propagates, span still closes
+    trc = Tracer(clock=_fake_clock())
+    with pytest.raises(ValueError):
+        with trc.span("boom"):
+            raise ValueError("body")
+    assert trc.find("boom")
+
+
+# ================== engine instrumentation + compat ===================== #
+def test_counters_view_compat_and_metrics(stack):
+    cfg, model, params, lay = stack
+    eng = _engine(model, lay)
+    prompts = [RNG.integers(0, cfg.vocab_size, (L,)).astype(np.int32)
+               for L in (11, 6)]
+    for p in prompts:
+        eng.submit(p, 4)
+    eng.run(params)
+    # the dict-compat view: iteration, membership, int values
+    c = dict(eng.counters)
+    assert c["engine_steps"] > 0 and isinstance(c["engine_steps"], int)
+    assert set(c) == set(eng.counters.KEYS)
+    assert eng.counters["prefill_launches"] == \
+        sum(-(-len(p) // 8) for p in prompts)
+    # the same numbers ARE registry counters
+    assert eng.registry.value("serve_engine_steps") == c["engine_steps"]
+    # lifecycle latency histograms populated per priority
+    assert eng.registry.percentiles("serve_ttft_s",
+                                    priority=0)["count"] == 2
+    assert eng.registry.percentiles("serve_tpot_s",
+                                    priority=0)["count"] == 2 * 3
+    assert eng.registry.percentiles("serve_queue_wait_s",
+                                    priority=0)["count"] == 2
+    assert summary_line(eng.registry).startswith("steps=")
+
+
+def test_engine_snapshot_roundtrip_and_old_format(stack):
+    cfg, model, params, lay = stack
+    prompts = [RNG.integers(0, cfg.vocab_size, (L,)).astype(np.int32)
+               for L in (9, 13)]
+
+    def mk():
+        eng = _engine(model, lay)
+        for p in prompts:
+            eng.submit(p, 6)
+        return eng
+
+    ref = mk()
+    full = ref.run(params)
+
+    # run half, snapshot, restore into a fresh engine: registry AND tokens
+    eng = mk()
+    for _ in range(4):
+        eng.step(params)
+    snap = eng.state_dict()
+    eng2 = mk()
+    eng2.load_state(snap)
+    assert eng2.registry.state_dict() == eng.registry.state_dict()
+    assert dict(eng2.counters) == dict(eng.counters)
+    while eng2.step(params):
+        pass
+    res = eng2.batcher.results()
+    assert all(np.array_equal(full[r], res[r]) for r in full)
+
+    # OLD-format snapshot: strip the "metrics" key (pre-registry snapshots
+    # carried only the counters dict) — must still load, counters intact
+    leaves, treedef = jax.tree_util.tree_flatten(snap)
+    old = jax.tree_util.tree_unflatten(treedef, leaves)
+    ctl_leaf = None
+    for i, leaf in enumerate(leaves):
+        try:
+            d = json.loads(bytes(np.asarray(leaf)).decode())
+            if isinstance(d, dict) and "counters" in d:
+                ctl_leaf, ctl, idx = leaf, d, i
+        except Exception:
+            continue
+    assert ctl_leaf is not None and "metrics" in ctl
+    del ctl["metrics"]
+    blob = np.frombuffer(json.dumps(ctl).encode(), np.uint8)
+    leaves[idx] = blob
+    old = jax.tree_util.tree_unflatten(treedef, leaves)
+    eng3 = mk()
+    eng3.load_state(old)
+    assert dict(eng3.counters) == dict(eng.counters)
+    while eng3.step(params):
+        pass
+    res3 = eng3.batcher.results()
+    assert all(np.array_equal(full[r], res3[r]) for r in full)
+
+
+def test_engine_trace_lifecycle_events(stack):
+    cfg, model, params, lay = stack
+    obs = Observability(tracing=True)
+    eng = _engine(model, lay, obs=obs)
+    p = RNG.integers(0, cfg.vocab_size, (10,)).astype(np.int32)
+    eng.submit(p, 4)
+    eng.run(params)
+    names = {e["name"] for e in obs.tracer.events()}
+    for want in ("engine.step", "assemble", "chunk_prefill", "ragged_decode",
+                 "sample", "request.submitted", "request.admitted",
+                 "request.first_token", "request.finished"):
+        assert want in names, want
+    # spans nest: phases sit at depth 1 inside engine.step on one track
+    steps = obs.tracer.find("engine.step")
+    assert len(steps) == eng.counters["engine_steps"]
+    assert all(e["depth"] == 0 for e in steps)
+    assert all(e["depth"] == 1 for e in obs.tracer.find("assemble"))
+    ft = obs.tracer.find("request.first_token")[0]
+    assert ft["args"]["ttft_s"] > 0
+    validate_chrome_trace(obs.tracer.to_chrome_trace())
+
+
+def test_engine_default_obs_disabled(stack):
+    """No obs argument: tracer is the shared no-op, metrics still count."""
+    cfg, model, params, lay = stack
+    eng = _engine(model, lay)
+    assert eng.tracer is NULL_TRACER
+    assert not eng.obs.tracing
+
+
+# ======================= FT events through the tracer =================== #
+def test_supervisor_fault_events_land_in_trace(stack, tmp_path):
+    from repro.ft import FaultInjector, FaultPlan, ServeSupervisor
+
+    cfg, model, params, lay = stack
+    prompts = [RNG.integers(0, cfg.vocab_size, (L,)).astype(np.int32)
+               for L in (9, 7)]
+    obs = Observability(tracing=True)
+
+    def mk():
+        eng = _engine(model, lay, obs=obs)
+        for p in prompts:
+            eng.submit(p, 4)
+        return eng
+
+    sup = ServeSupervisor(
+        mk, params, str(tmp_path / "ck"), checkpoint_every=2,
+        injector=FaultInjector(FaultPlan(crash_steps=frozenset({3}))),
+        obs=obs)
+    eng, hist = sup.run()
+    assert hist["restarts"] == 1
+    names = [e["name"] for e in obs.tracer.events()]
+    assert "ft.fault" in names and "ft.restart" in names \
+        and "ft.snapshot" in names
+    fault = obs.tracer.find("ft.fault")[0]
+    assert fault["args"]["kind"] == "StepCrash"
+    # crash at attempt 3 lands after the step-2 checkpoint: a restore event
+    assert obs.tracer.find("ft.restore")
+    assert obs.registry.value("ft_restarts") == 1
+    assert obs.registry.value("ft_faults", kind="StepCrash") == 1
+    # engine spans and supervisor instants share one exported timeline
+    doc = obs.tracer.to_chrome_trace()
+    validate_chrome_trace(doc)
+    tracks = {e["args"]["name"] for e in doc["traceEvents"]
+              if e["ph"] == "M"}
+    assert {"engine", "requests", "ft"} <= tracks
+
+
+def test_run_with_restarts_events(tmp_path):
+    from repro.ft import CheckpointManager, run_with_restarts
+
+    obs = Observability(tracing=True)
+    mgr = CheckpointManager(tmp_path / "ck", keep=2, async_write=False)
+    state, hist = run_with_restarts(
+        lambda s, i: s + 1, 0, 8, mgr, checkpoint_every=2,
+        fail_at={5}, obs=obs)
+    assert state == 8 and hist["restarts"] == 1
+    assert obs.tracer.find("ft.fault") and obs.tracer.find("ft.restore")
+    assert len(obs.tracer.find("train.step")) == hist["steps_run"]
+    assert obs.registry.value("ft_faults", kind="StepCrash") == 1
