@@ -18,8 +18,9 @@ def main() -> None:
                     help="skip the slow measured-speedup benchmarks")
     args = ap.parse_args()
 
-    from benchmarks import (dist_stats, obs_stats, paper_claims, plan_stats,
-                            serve_dist_stats, serve_stats)
+    from benchmarks import (dist_stats, dynamic_stats, obs_stats,
+                            paper_claims, plan_stats, serve_dist_stats,
+                            serve_stats)
 
     rows = []
     paper_claims.sec63_sanger_comparison(rows)
@@ -38,6 +39,9 @@ def main() -> None:
     # Observability: zero-cost-when-disabled contract + traced overhead +
     # lifecycle latency percentiles (BENCH_obs.json)
     obs_stats.obs_benchmark(rows, measure=not args.quick)
+    # Runtime ExecutionPlans: full-keep parity, executed-tile ratio vs
+    # dense, oracle recall, quality vs a bigger static plan (BENCH_dynamic)
+    dynamic_stats.dynamic_benchmark(rows, measure=not args.quick)
     if not args.quick:
         paper_claims.fig7_speedup(rows)
         paper_claims.sec21_quadratic_scaling(rows)
@@ -174,6 +178,18 @@ def main() -> None:
     if "serve_dist/parity" in d and d["serve_dist/parity"] != 1.0:
         failures.append(("serve_dist_parity", d["serve_dist/parity"],
                          "== 1.0 (8-shard greedy == single-device)"))
+    # runtime ExecutionPlans: full keep must reproduce the static walk,
+    # the dynamic plan must execute < half the dense tiles, selection must
+    # hit >= 0.9 oracle recall on both measured workloads, and it must
+    # beat a bigger static plan on the content-routed workload
+    for k, v in dynamic_stats.gates(rows):
+        gate = {"dynamic/full_keep_parity": "== 1.0 (dynamic == static)",
+                "dynamic/tile_ratio_vs_dense": "< 0.5 (executed tiles)",
+                "dynamic/oracle_recall_structured": ">= 0.9",
+                "dynamic/oracle_recall_random": ">= 0.9",
+                "dynamic/quality_err_ratio_vs_static":
+                    "<= 1.0 (beats bigger static plan)"}[k]
+        failures.append((k, v, gate))
     if failures:
         for f in failures:
             print(f"CHECK-FAILED: {f}", file=sys.stderr)

@@ -46,11 +46,39 @@ def hybrid_attention(q: jax.Array, k: jax.Array, v: jax.Array,
                      pattern: HybridSparsePattern, *,
                      impl: str = "blockwise",
                      block_q: int = 128, block_k: int = 128,
-                     scale: Optional[float] = None) -> jax.Array:
+                     scale: Optional[float] = None,
+                     plan: str = "static",
+                     dynamic_keep: Optional[int] = None,
+                     dynamic_local_window: Optional[int] = None,
+                     dynamic_pool_k: Optional[int] = None) -> jax.Array:
     """Hybrid sparse attention. q: (B, H, N, D); k/v: (B, Hkv, N, D).
 
     GQA: if Hkv < H, KV heads are repeated to match (H % Hkv == 0).
+
+    ``plan`` selects how step tables are built: ``"static"`` lowers the
+    pattern alone (the default ExecutionPlan path); ``"dynamic"`` routes
+    through :mod:`repro.core.dynamic` — per query block only the
+    ``dynamic_keep`` highest estimated-mass candidate tiles execute
+    (causal-local and global/sink tiles are never dropped; see the
+    DynamicConfig knobs ``dynamic_local_window`` / ``dynamic_pool_k``).
+    Dynamic plans need a table-driven engine (any ``impl`` but
+    ``dense_ref``) and compose with sequence parallelism: the selection
+    happens per shard over its [local | halo | global] view while the
+    exchange schedule stays static.
     """
+    if plan not in ("static", "dynamic"):
+        raise ValueError(f"unknown plan {plan!r}; choose static or dynamic")
+    dcfg = None
+    if plan == "dynamic":
+        if impl == "dense_ref":
+            raise ValueError("plan='dynamic' needs a table-driven engine "
+                             "(impl != 'dense_ref')")
+        if dynamic_keep is None:
+            raise ValueError("plan='dynamic' requires dynamic_keep")
+        from repro.core.dynamic import DynamicConfig
+        dcfg = DynamicConfig(keep=int(dynamic_keep),
+                             local_window=dynamic_local_window,
+                             pool_k=dynamic_pool_k)
     B, H, N, D = q.shape
     Hkv = k.shape[1]
     if Hkv != H:
@@ -88,8 +116,14 @@ def hybrid_attention(q: jax.Array, k: jax.Array, v: jax.Array,
             mesh, ax = seq
             out = sharded_attention(qf, kf, vf, pattern, mesh, ax,
                                     block_q=block_q, block_k=block_k,
-                                    scale=scale, impl=impl)
+                                    scale=scale, impl=impl, dynamic=dcfg)
             return out.reshape(B, H, N, D)
+
+    if dcfg is not None:
+        from repro.core.dynamic import dynamic_attention
+        out = dynamic_attention(qf, kf, vf, pattern, dcfg, block_q=block_q,
+                                block_k=block_k, scale=scale, impl=impl)
+        return out.reshape(B, H, N, D)
 
     if impl == "dense_ref":
         from repro.kernels.ref import reference_attention

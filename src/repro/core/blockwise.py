@@ -429,6 +429,58 @@ def table_dkv_scan(dout, delta, m, l, q, k, v, pos_q, pos_k, row_tile,
     return dk, dv
 
 
+def table_dkv_scatter_scan(dout, delta, m, l, q, k, v, pos_q, pos_k,
+                           kv_blocks, flags, sched: BandSchedule,
+                           scale: float):
+    """dK/dV pass over (possibly runtime-valued) FORWARD step tables.
+
+    The static engines walk ``plan.transposed_packed()`` — a host-built
+    regrouping that cannot exist for tables computed on device
+    (:mod:`repro.core.dynamic`, per-shard dynamic selection). This twin
+    walks the forward table width instead: at step ``s`` every query block
+    computes its (dk, dv) contribution to its step-``s`` tile, scatter-added
+    into the tile's slot (``.at[].add`` — duplicate tile indices across
+    query blocks accumulate, the runtime mirror of the transposed
+    regrouping). Same visits, same masks, same p recompute; padding steps
+    (flags 0) mask to nothing and add zeros to tile 0.
+
+    Shapes as :func:`table_dq_scan`. Returns ``(dk, dv)``
+    (B, nkb*Bk, D) f32.
+    """
+    B, nQ, D = q.shape
+    nq, W = kv_blocks.shape
+    bq = nQ // nq
+    nkb, bk = pos_k.shape
+    q_blk = q.reshape(B, nq, bq, D)
+    do_blk = dout.reshape(B, nq, bq, D)
+    m_blk = m.reshape(B, nq, bq)
+    l_blk = l.reshape(B, nq, bq)
+    dl_blk = delta.reshape(B, nq, bq)
+    k_r = k.reshape(B, nkb, bk, D)
+    v_r = v.reshape(B, nkb, bk, D)
+
+    def body(carry, s):
+        dk, dv = carry
+        blk = jax.lax.dynamic_index_in_dim(kv_blocks, s, 1, keepdims=False)
+        fl = jax.lax.dynamic_index_in_dim(flags, s, 1, keepdims=False)
+        k_b = jnp.take(k_r, blk, axis=1)                       # (B,nq,Bk,D)
+        v_b = jnp.take(v_r, blk, axis=1)
+        pos_kb = jnp.take(pos_k, blk, axis=0)                  # (nq, Bk)
+        scores = _dot(q_blk, k_b) * scale
+        mask = sched.step_mask(pos_q[:, :, None], pos_kb[:, None, :],
+                               fl[:, None, None])[None]
+        p = p_from_stats(scores, mask, m_blk, l_blk)
+        ds = p * (_dot(do_blk, v_b) - dl_blk[..., None])
+        dv = dv.at[:, blk].add(jnp.einsum("bnqk,bnqd->bnkd", p, do_blk))
+        dk = dk.at[:, blk].add(jnp.einsum("bnqk,bnqd->bnkd", ds,
+                                          q_blk.astype(jnp.float32)) * scale)
+        return (dk, dv), ()
+
+    z = jnp.zeros((B, nkb, bk, D), jnp.float32)
+    (dk, dv), _ = jax.lax.scan(body, (z, z), jnp.arange(W, dtype=jnp.int32))
+    return dk.reshape(B, nkb * bk, D), dv.reshape(B, nkb * bk, D)
+
+
 def bwd_dkv_scan(dout, delta, m, l, qw, kw, vw, pos, *,
                  plan: ExecutionPlan, scale: float):
     """Plan-driven dK/dV (the single-device engine): walk

@@ -51,6 +51,19 @@ twin, decode kernels, chunked prefill).
 
 All levels are pure static metadata (numpy only) — safe to build at trace
 time and cache.
+
+ARCHITECTURE: the step-table *contract* itself — column layout, flag bits,
+``PAD_SENTINEL`` padding, the fixed ``steps`` width, the padding-iff-flags-0
+and one-visit-per-tile invariants — lives in
+:mod:`repro.core.plan_contract`, NOT here. This module is merely one
+producer (the static, pattern-driven builder); :mod:`repro.core.dynamic`
+produces contract-identical tables at runtime from content, and
+:mod:`repro.dist.sharded_plan` / :class:`ChunkPlan` re-slice them per
+shard / per chunk. Every producer funnels through
+:func:`repro.core.plan_contract.validate_tables`, so the kernels and scan
+engines can consume any of them interchangeably. The constants ``BIG`` /
+``PAD_SENTINEL`` / ``STEP_WINDOW`` / ``STEP_GLOBAL`` are re-exported here
+for compatibility; ``plan_contract`` is their home.
 """
 from __future__ import annotations
 
@@ -62,18 +75,9 @@ from typing import Optional, Tuple
 import numpy as np
 
 from repro.core.patterns import HybridSparsePattern
-
-# Sentinel original-position for padding slots — THE one padding sentinel,
-# shared by every cache/halo/kernel path (``PAD_SENTINEL`` is the public
-# name). Must fit int32 (JAX default integer width) *and* keep pos_j - pos_i
-# inside int32 — any mask comparison against it must fail via the `pos < n`
-# in-range guard or a window-distance check.
-BIG = 2 ** 31 - 2 ** 20
-PAD_SENTINEL = BIG
-
-# ExecutionPlan step flags: which mask components a step evaluates.
-STEP_WINDOW = 1   # some band covers this (q_block, kv_tile) visit
-STEP_GLOBAL = 2   # the KV tile holds global-prefix keys
+# Contract constants re-exported from their home (see module docstring).
+from repro.core.plan_contract import (BIG, PAD_SENTINEL, STEP_GLOBAL,
+                                      STEP_WINDOW, validate_tables)
 
 
 def _round_up(x: int, m: int) -> int:
@@ -471,6 +475,8 @@ def _build_plan(sched: BandSchedule, block_q: int, block_k: int,
             flags[i, s] = fl
             band_set_ids[i, s] = sid
 
+    validate_tables(kv_blocks, flags, nkb=nkb, num_steps=num_steps,
+                    name="ExecutionPlan tables")
     return ExecutionPlan(
         sched=sched, block_q=block_q, block_k=block_k, n_pad=n_pad, nq=nq,
         nkb=nkb, max_steps=max_steps, kv_blocks=kv_blocks, flags=flags,
@@ -593,6 +599,7 @@ class ChunkPlan:
         fl = np.zeros((nq, width), dtype=np.int32)
         kv[: self.nq, : self.max_steps] = self.kv_blocks
         fl[: self.nq, : self.max_steps] = self.flags
+        validate_tables(kv, fl, nkb=self.nkb, name="ChunkPlan tables")
         return kv, fl
 
     def sharded_tables(self, n_shards: int, nq: int, width: int,
@@ -641,6 +648,10 @@ class ChunkPlan:
                 kv[s, i, w] = local
                 fl[s, i, w] = f
                 fill[s, i] = w + 1
+        local_tiles = tps + self.chunk_pad // self.block
+        for s in range(n_shards):
+            validate_tables(kv[s], fl[s], nkb=local_tiles,
+                            name=f"ChunkPlan shard {s} tables")
         return kv, fl
 
     def stats(self) -> dict:

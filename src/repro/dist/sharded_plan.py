@@ -56,8 +56,8 @@ from jax.sharding import Mesh, PartitionSpec as P
 from repro.compat import shard_map
 from repro.core.blockwise import (_global_rows, plan_backward,
                                   table_attention_scan, table_dkv_scan,
-                                  table_dq_scan, undo_working,
-                                  working_stream)
+                                  table_dkv_scatter_scan, table_dq_scan,
+                                  undo_working, working_stream)
 from repro.core.patterns import HybridSparsePattern
 from repro.core.scheduler import (PAD_SENTINEL, ExecutionPlan, build_plan,
                                   pack_rows, schedule)
@@ -385,7 +385,38 @@ def _shard_tables(sp: ShardedPlan, idx):
     return tbl, flg, pq, pk
 
 
-def _make_local_fwd(sp: ShardedPlan, axis: str, scale: float, impl: str):
+@functools.lru_cache(maxsize=64)
+def _sharded_always_keep(sp: ShardedPlan, local_window: int) -> np.ndarray:
+    """Per-shard never-drop masks over the candidate tables: the dynamic
+    selection runs on each shard's [local | halo | global] view, and the
+    causal-local/global exemptions are decided on ORIGINAL positions — the
+    view remap is transparent. Stacked (n_shards, nq_l, W) bool."""
+    from repro.core.dynamic import always_keep_mask
+    out = np.zeros(sp.tables.shape, dtype=bool)
+    for s in range(sp.n_shards):
+        out[s] = always_keep_mask(sp.tables[s], sp.flags[s], sp.pos_q[s],
+                                  sp.pos_k[s], local_window,
+                                  sp.plan.sched.causal)
+    return out
+
+
+def _dyn_select(sp: ShardedPlan, dyn, idx, q_l, k_view, tbl, flg, pq, pk,
+                scale: float):
+    """Per-shard top-k over the traced candidate slice: same selector as
+    the single-device path, run INSIDE the shard_map region after the view
+    exchange — the ppermute/psum schedule stays static while the executed
+    steps are content-chosen. Deterministic in (q_l, k_view), so forward
+    and backward replay the identical table."""
+    from repro.core.dynamic import _resolve_window, select_steps
+    lw = _resolve_window(dyn, sp.plan.block_q, sp.plan.block_k)
+    ak = jnp.take(jnp.asarray(_sharded_always_keep(sp, lw)), idx, axis=0)
+    keep = min(int(dyn.keep), sp.tables.shape[2])
+    return select_steps(q_l, k_view, tbl, flg, pq, pk, ak, keep, scale,
+                        dyn.pool_k)
+
+
+def _make_local_fwd(sp: ShardedPlan, axis: str, scale: float, impl: str,
+                    dyn=None):
     engine, interpret = _resolve_engine(impl)
     sched = sp.plan.sched
     bq, bk = sp.plan.block_q, sp.plan.block_k
@@ -394,6 +425,9 @@ def _make_local_fwd(sp: ShardedPlan, axis: str, scale: float, impl: str):
         idx = jax.lax.axis_index(axis)
         tbl, flg, pq, pk = _shard_tables(sp, idx)
         k_view, v_view = _build_views(sp, axis, idx, k_l, v_l)
+        if dyn is not None:
+            tbl, flg = _dyn_select(sp, dyn, idx, q_l, k_view, tbl, flg,
+                                   pq, pk, scale)
         if engine == "pallas":
             from repro.kernels.salo_attention import salo_table_attention
             return salo_table_attention(
@@ -406,11 +440,17 @@ def _make_local_fwd(sp: ShardedPlan, axis: str, scale: float, impl: str):
     return local
 
 
-def _make_local_bwd(sp: ShardedPlan, axis: str, scale: float, impl: str):
+def _make_local_bwd(sp: ShardedPlan, axis: str, scale: float, impl: str,
+                    dyn=None):
     """ONE shard-local backward: a single view exchange feeds BOTH the dQ
     pass (local forward tables) and the dK/dV pass (packed transposed
     tables) — separate shard_map regions would each re-run the halo
-    ppermutes + global psum (collectives don't CSE across regions)."""
+    ppermutes + global psum (collectives don't CSE across regions).
+
+    Dynamic plans replay the forward's selection from (q_l, k_view)
+    (gradient-free, deterministic) and swap the packed-transposed dK/dV
+    walk — a host-built artifact that cannot exist for runtime tables —
+    for the scatter twin over the view."""
     engine, interpret = _resolve_engine(impl)
     sched = sp.plan.sched
     bq, bk = sp.plan.block_q, sp.plan.block_k
@@ -422,6 +462,25 @@ def _make_local_bwd(sp: ShardedPlan, axis: str, scale: float, impl: str):
         qbt = jnp.take(jnp.asarray(sp.t_q_blocks), idx, axis=0)
         tfl = jnp.take(jnp.asarray(sp.t_flags), idx, axis=0)
         k_view, v_view = _build_views(sp, axis, idx, k_l, v_l)
+        if dyn is not None:
+            tbl, flg = _dyn_select(sp, dyn, idx, q_l, k_view, tbl, flg,
+                                   pq, pk, scale)
+            if engine == "pallas":
+                from repro.kernels.salo_backward import \
+                    salo_table_backward_dq
+                dq = salo_table_backward_dq(
+                    dout, delta, m, l, q_l, k_view, v_view, pq, pk,
+                    tbl.reshape(-1), flg.reshape(-1), sched=sched,
+                    block_q=bq, block_k=bk, scale=scale,
+                    interpret=interpret)
+            else:
+                dq = table_dq_scan(dout, delta, m, l, q_l, k_view, v_view,
+                                   pq, pk, tbl, flg, sched, scale)
+            dk_view, dv_view = table_dkv_scatter_scan(
+                dout, delta, m, l, q_l, k_view, v_view, pq, pk, tbl, flg,
+                sched, scale)
+            dk_l, dv_l = _return_views(sp, axis, idx, dk_view, dv_view)
+            return dq, dk_l, dv_l
         if engine == "pallas":
             from repro.kernels.salo_backward import (salo_table_backward_dq,
                                                      salo_table_backward_dkv)
@@ -449,13 +508,13 @@ def _make_local_bwd(sp: ShardedPlan, axis: str, scale: float, impl: str):
 # ---------------------------------------------------------------------- #
 # The sharded attention entry point (custom VJP over shard_map passes)
 # ---------------------------------------------------------------------- #
-def _sharded_forward(q, k, v, sp, mesh, axis, scale, impl):
+def _sharded_forward(q, k, v, sp, mesh, axis, scale, impl, dyn=None):
     plan, sched = sp.plan, sp.plan.sched
     N = q.shape[1]
     qw = working_stream(q, sched, plan)
     kw = working_stream(k, sched, plan)
     vw = working_stream(v, sched, plan)
-    fn = shard_map(_make_local_fwd(sp, axis, scale, impl), mesh=mesh,
+    fn = shard_map(_make_local_fwd(sp, axis, scale, impl, dyn), mesh=mesh,
                    in_specs=(P(None, axis, None),) * 3,
                    out_specs=(P(None, axis, None), P(None, axis),
                               P(None, axis)),
@@ -472,19 +531,19 @@ def _sharded_forward(q, k, v, sp, mesh, axis, scale, impl):
     return out, (out_w, m, l)
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
-def _sharded(q, k, v, sp, mesh, axis, scale, impl):
-    out, _ = _sharded_forward(q, k, v, sp, mesh, axis, scale, impl)
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8))
+def _sharded(q, k, v, sp, mesh, axis, scale, impl, dyn):
+    out, _ = _sharded_forward(q, k, v, sp, mesh, axis, scale, impl, dyn)
     return out
 
 
-def _sharded_fwd(q, k, v, sp, mesh, axis, scale, impl):
+def _sharded_fwd(q, k, v, sp, mesh, axis, scale, impl, dyn):
     out, (out_w, m, l) = _sharded_forward(q, k, v, sp, mesh, axis, scale,
-                                          impl)
+                                          impl, dyn)
     return out, (q, k, v, out_w, m, l)
 
 
-def _sharded_bwd(sp, mesh, axis, scale, impl, res, g):
+def _sharded_bwd(sp, mesh, axis, scale, impl, dyn, res, g):
     q, k, v, out_w, m, l = res
 
     # plan_backward invokes dq_engine then dkv_engine with identical
@@ -493,7 +552,8 @@ def _sharded_bwd(sp, mesh, axis, scale, impl, res, g):
     stash = {}
 
     def dq_engine(dout, delta, m_, l_, qw, kw, vw, pos):
-        fn = shard_map(_make_local_bwd(sp, axis, scale, impl), mesh=mesh,
+        fn = shard_map(_make_local_bwd(sp, axis, scale, impl, dyn),
+                       mesh=mesh,
                        in_specs=(P(None, axis, None), P(None, axis),
                                  P(None, axis), P(None, axis),
                                  P(None, axis, None), P(None, axis, None),
@@ -530,7 +590,8 @@ def sharded_attention(q: jax.Array, k: jax.Array, v: jax.Array,
                       block_q: Optional[int] = None,
                       block_k: Optional[int] = None,
                       scale: Optional[float] = None,
-                      impl: str = "blockwise") -> jax.Array:
+                      impl: str = "blockwise",
+                      dynamic=None) -> jax.Array:
     """Sequence-parallel hybrid sparse attention over ``mesh[axis]``.
 
     q/k/v: (B, N, D) with N sharded over ``axis`` (B typically folds
@@ -547,6 +608,11 @@ def sharded_attention(q: jax.Array, k: jax.Array, v: jax.Array,
     "pallas"/"pallas_interpret" (the fused scalar-prefetch kernels via
     their table-driven entry points; compiled mode degrades to the twin
     off-TPU exactly like kernels/ops.py).
+
+    ``dynamic`` (a :class:`repro.core.dynamic.DynamicConfig`) turns on
+    content-based selection: each shard top-k's its own candidate steps
+    over the exchanged [local | halo | global] view, so the collective
+    schedule stays static while the executed tiles are data-dependent.
     """
     B, N, D = q.shape
     n_shards = int(mesh.shape[axis])
@@ -556,4 +622,12 @@ def sharded_attention(q: jax.Array, k: jax.Array, v: jax.Array,
     plan = build_plan(sched, bq, bk, n_shards * math.lcm(bq, bk))
     sp = shard_plan(plan, n_shards)
     scale_ = (D ** -0.5) if scale is None else scale
-    return _sharded(q, k, v, sp, mesh, axis, scale_, impl)
+    if dynamic is not None:
+        from repro.core.dynamic import (_account_build, _resolve_window,
+                                        check_keep)
+        lw = _resolve_window(dynamic, bq, bk)
+        check_keep(min(int(dynamic.keep), sp.tables.shape[2]),
+                   _sharded_always_keep(sp, lw), what="sharded plan")
+        _account_build(sp.flags.reshape(-1, sp.tables.shape[2]),
+                       min(int(dynamic.keep), sp.tables.shape[2]))
+    return _sharded(q, k, v, sp, mesh, axis, scale_, impl, dynamic)

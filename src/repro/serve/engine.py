@@ -42,7 +42,7 @@ class CountersView(MutableMapping):
 
     KEYS = ("prefill_launches", "decode_launches", "prefill_tokens",
             "decode_tokens", "decode_pages_read", "decode_pages_total",
-            "engine_steps")
+            "prefill_pages_read", "prefill_pages_total", "engine_steps")
 
     def __init__(self, registry):
         self._reg = registry
@@ -573,20 +573,42 @@ class ContinuousEngine:
             (pos < lay.n_global) | (pos + lay.ring_cap >= c1))
         slot = np.where(pos < lay.n_global, pos,
                         lay.n_sink + (pos - lay.n_global) % lay.ring_cap)
+        # Stats-driven ctx-page skipping for the chunk's READ of the paged
+        # context — the chunked-prefill twin of the decode page-keep mask
+        # (same history, same Salca rule): pages whose decayed max-score
+        # history fell below the threshold are routed to the null page and
+        # their positions to PAD_SENTINEL; sink pages and pages the chunk
+        # WRITES are unconditionally kept. Fresh/just-admitted requests
+        # have an all-zero (hot) history, so plain prefill is untouched —
+        # the mask only bites when a request re-prefills with accumulated
+        # stats (preemption resume) or the threshold is driven externally.
+        npp = lay.pages_per_req
+        pt_read, ctx_read = req.pages, ctx_pos
+        pages_read = npp
+        if self.track_stats:
+            rkeep = self.page_hist[req.row] \
+                >= self.ccfg.page_sparsity_threshold
+            rkeep[: lay.sink_pages] = True
+            rkeep[np.unique(slot[keep] // page)] = True
+            pages_read = int(rkeep.sum())
+            pt_read = np.where(rkeep, req.pages, 0).astype(np.int32)
+            ctx_read = np.where(np.repeat(rkeep, page), ctx_pos,
+                                BIG).astype(np.int32)
         if S > 1:
             kv, fl = plan.sharded_tables(S, self.nq, self.table_w)
             owner = slot // lay.slots_per_shard
             local = slot % lay.slots_per_shard
-            pages2d = req.pages.reshape(S, lay.pages_per_shard)
+            pages2d = pt_read.reshape(S, lay.pages_per_shard)
             keep_s = keep[None] & (owner[None] == np.arange(S)[:, None])
-            phys = np.where(keep_s, pages2d[np.arange(S)[:, None],
-                                            local[None] // page],
+            phys = np.where(keep_s,
+                            req.pages.reshape(S, lay.pages_per_shard)[
+                                np.arange(S)[:, None], local[None] // page],
                             0).astype(np.int32)
             off = np.where(keep_s, local[None] % page, 0).astype(np.int32)
             logits, self.slabs = self._chunk_jit(
                 params, self.slabs,
                 jnp.asarray(pages2d), jnp.asarray(
-                    ctx_pos.reshape(S, lay.slots_per_shard)),
+                    ctx_read.reshape(S, lay.slots_per_shard)),
                 jnp.asarray(pos_q), jnp.asarray(tokens), jnp.asarray(kv),
                 jnp.asarray(fl), jnp.asarray(phys), jnp.asarray(off))
         else:
@@ -594,12 +616,16 @@ class ContinuousEngine:
             phys = np.where(keep, req.pages[slot // page], 0).astype(np.int32)
             off = np.where(keep, slot % page, 0).astype(np.int32)
             logits, self.slabs = self._chunk_jit(
-                params, self.slabs, jnp.asarray(req.pages),
-                jnp.asarray(ctx_pos), jnp.asarray(pos_q),
+                params, self.slabs, jnp.asarray(pt_read),
+                jnp.asarray(ctx_read), jnp.asarray(pos_q),
                 jnp.asarray(tokens), jnp.asarray(kv), jnp.asarray(fl),
                 jnp.asarray(phys), jnp.asarray(off))
         self.counters["prefill_launches"] += 1
         self.counters["prefill_tokens"] += clen
+        self.counters["prefill_pages_read"] += pages_read
+        self.counters["prefill_pages_total"] += npp
+        self.registry.inc("serve_prefill_est_hbm_bytes",
+                          pages_read * self._page_read_bytes)
         self.registry.inc("serve_prefill_tiles",
                           plan.stats()["executed_tiles"])
         req.prefilled = c1

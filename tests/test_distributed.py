@@ -46,11 +46,12 @@ def _run(body: str):
 
 
 def test_sequence_parallel_attention_matches_oracle():
-    """The retired prototype's entry point (now a ShardedPlan shim) keeps
-    its contract on the patterns the prototype supported."""
+    """sharded_attention keeps the retired prototype's contract on the
+    patterns the prototype supported (its shim was deleted — this is the
+    direct entry point)."""
     _run("""
         from repro.core import patterns as P_
-        from repro.core.distributed import sequence_parallel_attention
+        from repro.dist.sharded_plan import sharded_attention
         from repro.kernels.ref import reference_attention
         mesh = jax.make_mesh((8,), ("data",))
         rng = np.random.default_rng(0)
@@ -62,8 +63,8 @@ def test_sequence_parallel_attention_matches_oracle():
                     P_.causal_sliding_window(16)):
             ref = reference_attention(q, k, v, pat)
             with mesh:
-                out = jax.jit(lambda a, b, c: sequence_parallel_attention(
-                    a, b, c, pat, mesh))(q, k, v)
+                out = jax.jit(lambda a, b, c: sharded_attention(
+                    a, b, c, pat, mesh, "data"))(q, k, v)
             np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
                                        rtol=2e-3, atol=2e-3)
         print("SP-ATTN-OK")

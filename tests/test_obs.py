@@ -362,3 +362,35 @@ def test_run_with_restarts_events(tmp_path):
     assert obs.tracer.find("ft.fault") and obs.tracer.find("ft.restore")
     assert len(obs.tracer.find("train.step")) == hist["steps_run"]
     assert obs.registry.value("ft_faults", kind="StepCrash") == 1
+
+
+# ==================== runtime-ExecutionPlan metrics ===================== #
+def test_dynamic_plan_build_metrics():
+    """Tracing a plan="dynamic" attention accounts one build and one
+    keep-ratio observation in the process-wide registry (host-side, at
+    trace time — the same pattern as the kernel launch accounting)."""
+    from repro.core import patterns as P
+    from repro.core.attention import hybrid_attention
+    from repro.obs.metrics import global_registry
+
+    reg = global_registry()
+    builds0 = (reg.value("dynamic_plan_builds")
+               if "dynamic_plan_builds" in reg.families() else 0)
+    h0 = (reg.hist("dynamic_plan_keep_ratio")
+          if "dynamic_plan_keep_ratio" in reg.families() else None)
+    count0 = h0.count if h0 is not None else 0
+
+    rng = np.random.default_rng(11)
+    q, k, v = (jnp.asarray(rng.normal(size=(1, 2, 96, 16)), jnp.float32)
+               for _ in range(3))
+    # an odd shape/keep combination, so this trace can't be jit-cached by
+    # an earlier test (the accounting runs at trace time only)
+    out = hybrid_attention(q, k, v, P.causal_sliding_window(31, n_sinks=3),
+                           plan="dynamic", dynamic_keep=5,
+                           block_q=16, block_k=16)
+    assert np.all(np.isfinite(np.asarray(out)))
+    assert reg.value("dynamic_plan_builds") >= builds0 + 1
+    h = reg.hist("dynamic_plan_keep_ratio")
+    assert h is not None and h.count >= count0 + 1
+    # keep=5 of max 5-ish candidate steps: ratio lies in (0, 1]
+    assert 0.0 < h.max <= 1.0

@@ -270,3 +270,48 @@ def test_sharded_int8_page_sparse_matches_single_device():
                        capture_output=True, text=True, timeout=900)
     assert r.returncode == 0, f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr}"
     assert "QUANT-SHARD-OK" in r.stdout
+
+
+# ================== stats-driven chunked-prefill reads ================== #
+def test_prefill_keepall_counters_and_parity():
+    """threshold=-inf through MULTI-CHUNK prefill: the ctx-read mask is on
+    but keeps every page — tokens identical to the machinery being off,
+    and the prefill page-read counters prove no read was skipped."""
+    cfg = get_smoke("smollm-135m")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(7))
+    prompts = _prompts(cfg, (21, 30))          # > chunk: several chunks each
+    ref = _run(_engine(cfg, model, kv_dtype="int8"), params, prompts, 6)
+    eng = _engine(cfg, model, kv_dtype="int8", thr=float("-inf"), decay=0.5)
+    out = _run(eng, params, prompts, 6)
+    _assert_parity(out, ref)
+    assert (eng.counters["prefill_pages_read"]
+            == eng.counters["prefill_pages_total"] > 0)
+
+
+def test_prefill_page_skip_engages():
+    """Chunked prefill actually skips ctx-page reads once a row's history
+    falls below the threshold (driven directly here — fresh requests are
+    admitted hot, the PR-6 decode stats populate the history in service):
+    the skipped chunk reads only sink + chunk-written pages, and the
+    request still completes."""
+    cfg = get_smoke("smollm-135m")
+    cfg = dataclasses.replace(cfg, salo=dataclasses.replace(
+        cfg.salo, window=64))                  # ring spans several pages
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(8))
+    eng = _engine(cfg, model, thr=-0.1, decay=0.3, max_batch=1)
+    prompt = RNG.integers(0, cfg.vocab_size, (40,)).astype(np.int32)
+    rid = eng.submit(prompt, 4)
+    eng.step(params)                           # admit + first chunk (hot)
+    r0, t0 = (eng.counters["prefill_pages_read"],
+              eng.counters["prefill_pages_total"])
+    assert r0 == t0 > 0                        # all-zero history: no skip
+    req = next(r for r in eng.batcher.rows if r is not None)
+    eng.page_hist[req.row, :] = -1.0           # below threshold everywhere
+    eng.step(params)                           # next chunk: mask bites
+    r1, t1 = (eng.counters["prefill_pages_read"],
+              eng.counters["prefill_pages_total"])
+    assert r1 - r0 < t1 - t0, (r1 - r0, t1 - t0)
+    res = eng.run(params)
+    assert res[rid].shape[0] == 4              # completes, emits max_new

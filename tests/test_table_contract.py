@@ -1,0 +1,196 @@
+"""The step-table contract (core/plan_contract.py), fuzzed:
+  * randomly generated VALID tables — random widths, random real/padding
+    interleaving, random tile order, both flag bits — are accepted by
+    validate_tables, and the fused Pallas table kernel (interpret mode)
+    plus the XLA scan twin both match a dense reference built from the
+    union of per-step masks (the contract's semantics)
+  * each contract violation is rejected with a specific ValueError
+  * traced table values downgrade to structural-only checks (the jit path
+    runtime builders rely on)
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import patterns as P
+from repro.core.blockwise import table_attention_scan
+from repro.core.plan_contract import (STEP_GLOBAL, STEP_WINDOW,
+                                      validate_tables)
+from repro.core.scheduler import schedule
+from repro.kernels.salo_attention import salo_table_attention
+
+BLK = 16
+SCHEDS = [
+    ("longformer", schedule(P.longformer(16, n_global=8), 128)),
+    ("window_sinks", schedule(P.causal_sliding_window(24, n_sinks=4), 128)),
+]
+
+
+def _random_tables(rng, nq, nkb, width):
+    """A random contract-conforming table: per row a random-size set of
+    distinct tiles with random flags, scattered among interleaved padding
+    steps (padding placement is NOT constrained by the contract)."""
+    kvt = np.zeros((nq, width), np.int32)
+    flg = np.zeros((nq, width), np.int32)
+    for i in range(nq):
+        r = int(rng.integers(0, min(width, nkb) + 1))
+        tiles = rng.choice(nkb, size=r, replace=False)
+        slots = rng.choice(width, size=r, replace=False)
+        for t, s in zip(tiles, slots):
+            kvt[i, s] = t
+            flg[i, s] = int(rng.integers(1, 4))    # WINDOW, GLOBAL, or both
+    return kvt, flg
+
+
+def _dense_from_tables(qw, kw, vw, pos_q, pos_k, kvt, flg, sched, scale):
+    """The contract's meaning: the union of per-step masks applied to a
+    dense softmax over the working grid (rows with no allowed key -> 0)."""
+    nq, bq = pos_q.shape
+    nkb, bk = pos_k.shape
+    allow = np.zeros((nq * bq, nkb * bk), bool)
+    for i in range(nq):
+        for s in range(kvt.shape[1]):
+            f = int(flg[i, s])
+            if f == 0:
+                continue
+            t = int(kvt[i, s])
+            m = np.asarray(sched.step_mask(
+                pos_q[i][:, None], pos_k[t][None, :], f))
+            allow[i * bq:(i + 1) * bq, t * bk:(t + 1) * bk] |= m
+    s_ = np.einsum("bqd,bkd->bqk", np.asarray(qw, np.float64),
+                   np.asarray(kw, np.float64)) * scale
+    s_ = np.where(allow[None], s_, -np.inf)
+    mx = np.max(s_, axis=-1, keepdims=True)
+    e = np.exp(s_ - np.where(np.isfinite(mx), mx, 0.0))
+    den = e.sum(-1, keepdims=True)
+    p = np.where(den > 0, e / np.maximum(den, 1e-30), 0.0)
+    return p @ np.asarray(vw, np.float64)
+
+
+@pytest.mark.parametrize("name,sched", SCHEDS)
+def test_fuzz_valid_tables_accepted_and_engines_match(name, sched):
+    """~12 random valid tables per schedule: validate_tables accepts, and
+    both consumers (Pallas interpret kernel, XLA scan twin) agree with
+    the mask-union dense reference."""
+    rng = np.random.default_rng(0)
+    plan = sched.plan(BLK, BLK)
+    pos = plan.positions_padded()
+    pos_q = pos.reshape(plan.nq, BLK)
+    pos_k = pos.reshape(plan.nkb, BLK)
+    n_pad = pos.shape[0]
+    B, D = 2, 16
+    scale = D ** -0.5
+    for case in range(12):
+        width = int(rng.integers(1, 7))
+        kvt, flg = _random_tables(rng, plan.nq, plan.nkb, width)
+        validate_tables(kvt, flg, nkb=plan.nkb,
+                        name=f"fuzz[{name}/{case}]")
+        qw, kw, vw = (jnp.asarray(rng.normal(size=(B, n_pad, D)),
+                                  jnp.float32) for _ in range(3))
+        ref = _dense_from_tables(qw, kw, vw, pos_q, pos_k, kvt, flg,
+                                 sched, scale)
+        out_k, _, _ = salo_table_attention(
+            qw, kw, vw, jnp.asarray(pos_q), jnp.asarray(pos_k),
+            jnp.asarray(kvt.reshape(-1)), jnp.asarray(flg.reshape(-1)),
+            sched=sched, block_q=BLK, block_k=BLK, scale=scale,
+            interpret=True)
+        np.testing.assert_allclose(
+            np.asarray(out_k), ref, rtol=2e-5, atol=2e-5,
+            err_msg=f"{name} case {case}: pallas kernel vs mask union")
+        out_s, _, _ = table_attention_scan(
+            qw, kw, vw, jnp.asarray(pos_q), jnp.asarray(pos_k),
+            jnp.asarray(kvt), jnp.asarray(flg), sched, scale)
+        np.testing.assert_allclose(
+            np.asarray(out_s), ref, rtol=2e-5, atol=2e-5,
+            err_msg=f"{name} case {case}: scan twin vs mask union")
+
+
+def test_static_builder_tables_pass():
+    """Every static plan's tables satisfy the contract it defined."""
+    for name, sched in SCHEDS:
+        plan = sched.plan(BLK, BLK)
+        validate_tables(plan.kv_blocks, plan.flags, nkb=plan.nkb,
+                        num_steps=plan.num_steps, name=name)
+
+
+def _ok():
+    kvt = np.array([[1, 0, 2], [0, 0, 0]], np.int32)
+    flg = np.array([[1, 3, 2], [0, 0, 0]], np.int32)
+    return kvt, flg
+
+
+def test_rejects_shape_and_dtype():
+    kvt, flg = _ok()
+    with pytest.raises(ValueError, match="rank-2"):
+        validate_tables(kvt.reshape(-1), flg.reshape(-1), nkb=4)
+    with pytest.raises(ValueError, match="rank-2"):
+        validate_tables(kvt, flg[:, :2], nkb=4)
+    with pytest.raises(ValueError, match="width"):
+        validate_tables(kvt[:, :0], flg[:, :0], nkb=4)
+    with pytest.raises(ValueError, match="int32"):
+        validate_tables(kvt.astype(np.float32), flg, nkb=4)
+    with pytest.raises(ValueError, match="int32"):
+        validate_tables(kvt, flg.astype(np.int64), nkb=4)
+    with pytest.raises(ValueError, match="nkb"):
+        validate_tables(kvt, flg, nkb=0)
+
+
+def test_rejects_value_violations():
+    kvt, flg = _ok()
+    validate_tables(kvt, flg, nkb=4)                      # baseline passes
+    bad_f = flg.copy()
+    bad_f[0, 0] = 4                                       # unknown bit
+    with pytest.raises(ValueError, match="unknown flag bits"):
+        validate_tables(kvt, bad_f, nkb=4)
+    bad_t = kvt.copy()
+    bad_t[0, 2] = 9                                       # out of range
+    with pytest.raises(ValueError, match=r"outside \[0, 4\)"):
+        validate_tables(bad_t, flg, nkb=4)
+    with pytest.raises(ValueError, match="outside"):
+        validate_tables(-kvt, flg, nkb=4)
+    bad_p = kvt.copy()
+    bad_p[1, 1] = 3                                       # padding w/ tile
+    with pytest.raises(ValueError, match="padding step"):
+        validate_tables(bad_p, flg, nkb=4)
+    dup_t = np.array([[2, 1, 2]], np.int32)               # tile 2 twice
+    dup_f = np.array([[1, 1, 2]], np.int32)
+    with pytest.raises(ValueError, match="more than once"):
+        validate_tables(dup_t, dup_f, nkb=4)
+    # padding steps aliasing tile 0 do NOT count as duplicate visits
+    validate_tables(np.array([[0, 0, 0]], np.int32),
+                    np.array([[1, 0, 0]], np.int32), nkb=4)
+
+
+def test_rejects_num_steps_violations():
+    kvt, flg = _ok()
+    validate_tables(kvt, flg, nkb=4, num_steps=np.array([3, 0]))
+    with pytest.raises(ValueError, match="right-aligned"):
+        validate_tables(kvt, flg, nkb=4, num_steps=np.array([2, 0]))
+    with pytest.raises(ValueError, match="num_steps outside"):
+        validate_tables(kvt, flg, nkb=4, num_steps=np.array([5, 0]))
+    gap_t = np.array([[1, 0, 2]], np.int32)               # hole in prefix
+    gap_f = np.array([[1, 0, 2]], np.int32)
+    with pytest.raises(ValueError, match="right-aligned"):
+        validate_tables(gap_t, gap_f, nkb=4, num_steps=np.array([3]))
+
+
+def test_traced_values_structural_only():
+    """Inside jit the VALUES are unknowable: structural checks still apply
+    (and fail eagerly), value checks are skipped — contract-breaking
+    values must flow through untouched (runtime builders validate their
+    materialized twins in tests instead)."""
+    def f(kvt, flg):
+        validate_tables(kvt, flg, nkb=2, name="traced")
+        return kvt + flg
+
+    bad_kvt = jnp.array([[7, 7]], jnp.int32)        # oob + dup: not checked
+    bad_flg = jnp.array([[1, 1]], jnp.int32)
+    jax.jit(f)(bad_kvt, bad_flg)                    # must not raise
+
+    def g(kvt, flg):
+        validate_tables(kvt.astype(jnp.float32), flg, nkb=2, name="traced")
+        return kvt
+
+    with pytest.raises(ValueError, match="int32"):
+        jax.jit(g)(bad_kvt, bad_flg)
