@@ -20,12 +20,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.salo_cycle_model import (PAPER_SPEEDUP_CPU,
-                                         PAPER_SPEEDUP_GPU, SALOHardware,
+                                         PAPER_SPEEDUP_GPU,
                                          attention_cycles,
                                          dense_attention_cycles)
 from repro.core import patterns as P
 from repro.core.blockwise import blockwise_attention
-from repro.kernels.ref import reference_attention
 
 WORKLOADS = {
     "longformer": dict(pattern=P.longformer(512, n_global=1), n=4096,

@@ -20,9 +20,12 @@ def main() -> None:
 
     from benchmarks import (dist_stats, dynamic_stats, obs_stats,
                             paper_claims, plan_stats, serve_dist_stats,
-                            serve_stats)
+                            serve_stats, verify_stats)
 
     rows = []
+    # Static soundness: every registered pattern's plan/adjoint/exchange/
+    # never-drop/chunk proofs + jaxpr effect lint + code lint (BENCH_verify)
+    verify_stats.verify_benchmark(rows, measure=not args.quick)
     paper_claims.sec63_sanger_comparison(rows)
     paper_claims.table3_quantization(rows)
     # ExecutionPlan: fused single-launch vs per-band-launch (BENCH_plan.json)
@@ -53,6 +56,11 @@ def main() -> None:
     # quick invariant checks so `benchmarks.run` doubles as a regression gate
     d = {name: value for name, value, _ in rows}
     failures = []
+    # static soundness: the analysis gate must prove every registered
+    # pattern's tables sound — a 0.0 here names a real counterexample
+    if d.get("verify/plans_sound") != 1.0:
+        failures.append(("verify_plans_sound", d.get("verify/plans_sound"),
+                         "== 1.0 (all registered patterns proven sound)"))
     for k, v in d.items():
         if k.endswith("pe_utilization") and v < 0.65:
             failures.append((k, v, ">=0.65 (exact-mask convention)"))

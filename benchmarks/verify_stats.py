@@ -1,0 +1,64 @@
+"""Static-soundness benchmark -> BENCH_verify.json.
+
+Runs the repro.analysis gate (plan soundness prover + jaxpr effect lint +
+code lint) over every registered config/pattern and reports the result as
+benchmark rows, so ``python -m benchmarks.run`` gates
+``verify/plans_sound == 1.0`` — every registered pattern's coverage,
+adjoint, shard-exchange, never-drop and chunk-slice proofs must hold, the
+traced entry points must be effect-clean, and the tree must be lint-clean.
+
+Used by ``python -m benchmarks.run`` (section ``verify/``) and standalone:
+
+  PYTHONPATH=src python -m benchmarks.verify_stats [--out BENCH_verify.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def collect(measure: bool = True) -> dict:
+    """The analysis gate's report. ``measure=False`` skips the (slow)
+    serving-engine decode trace; the pure-numpy proofs always run."""
+    from repro.analysis.lint import collect as lint_collect
+
+    return lint_collect(engine=measure)
+
+
+def verify_benchmark(rows, measure: bool = True,
+                     out_path: str = "BENCH_verify.json") -> dict:
+    """benchmarks.run section: report + write BENCH_verify.json."""
+    data = collect(measure=measure)
+    s = data["summary"]
+    rows.append(("verify/plans_sound", s["plans_sound"],
+                 "all_registered_patterns_proven_sound"))
+    rows.append(("verify/targets_checked", float(s["targets_checked"]),
+                 "plan+chunk+jaxpr+code_lint_targets"))
+    rows.append(("verify/findings", float(s["findings"]),
+                 "total_findings_all_passes"))
+    with open(out_path, "w") as fh:
+        json.dump(data, fh, indent=2, sort_keys=True)
+    return data
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="BENCH_verify.json")
+    ap.add_argument("--quick", action="store_true",
+                    help="skip the serving-engine decode trace")
+    args = ap.parse_args()
+    rows: list = []
+    data = verify_benchmark(rows, measure=not args.quick,
+                            out_path=args.out)
+    print("name,value,derived")
+    for name, value, derived in rows:
+        print(f"{name},{value:.6g},{derived}")
+    if data["summary"]["errors"]:
+        for f in data["findings"]:
+            print(f"CHECK-FAILED: {f}", file=sys.stderr)
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""repro.analysis — static soundness verification and repo lint gates.
+
+Three cooperating passes (run together by ``python -m repro.analysis.lint``):
+
+* :mod:`repro.analysis.plan_verify` — the plan soundness prover. For every
+  concrete ExecutionPlan / TransposedPlan / PackedTransposedPlan /
+  ChunkPlan / ShardedPlan it proves exact tile coverage against the
+  pattern mask (no missing tiles, no double-counted tiles), adjoint
+  soundness (transposed/packed tables are an exact permutation of the
+  forward walk), shard-exchange soundness (per-shard tables plus the
+  ppermute/psum schedule reconstruct exactly the unsharded tile set) and
+  the dynamic never-drop invariant — with counterexamples naming the
+  offending (q-block, kv-block) tile.
+* :mod:`repro.analysis.jaxpr_lint` — the effect linter over the jitted
+  entry points: scatter index-mode races, non-owner slab writes,
+  collective dtype leaks, unreduced shard_map outputs, double dequant,
+  pallas launch-count contract, per-launch VMEM budget estimates.
+* :mod:`repro.analysis.code_lint` — a stdlib-``ast`` fallback for the
+  ruff CI step (unused imports, mutable default arguments, shadowed
+  builtins), so the gate also runs on hosts without ruff installed.
+
+Which plans/patterns get verified is declared once, in
+:mod:`repro.analysis.registry`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One verified defect, with the counterexample that proves it.
+
+    ``q_block``/``kv_block`` name the offending tile of the plan grid the
+    pass was walking (the working/view tile universe of that plan) when
+    the defect is tile-addressable; pure structural findings leave them
+    ``None``.
+    """
+    pass_name: str                    # "coverage" | "adjoint" | "exchange" |
+    #                                   "never-drop" | "chunk" | "jaxpr" | ...
+    target: str                       # registry target / entry point name
+    message: str
+    q_block: Optional[int] = None
+    kv_block: Optional[int] = None
+    severity: str = "error"
+
+    def counterexample(self) -> str:
+        loc = ""
+        if self.q_block is not None or self.kv_block is not None:
+            loc = f" [counterexample: (q_block={self.q_block}, " \
+                  f"kv_block={self.kv_block})]"
+        return f"{self.severity}: {self.target}: {self.pass_name}: " \
+               f"{self.message}{loc}"
+
+    def as_dict(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+
+def render(findings: List[Finding]) -> str:
+    return "\n".join(f.counterexample() for f in findings)
+
+
+__all__ = ["Finding", "render"]

@@ -36,7 +36,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.patterns import HybridSparsePattern
-from repro.core.blockwise import blockwise_attention, decode_attention
+from repro.core.blockwise import blockwise_attention
 from repro.obs.metrics import global_registry
 
 IMPLS = ("dense_ref", "blockwise", "pallas", "pallas_interpret")

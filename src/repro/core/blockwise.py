@@ -41,7 +41,6 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core import renorm
 from repro.core.scheduler import (BIG, STEP_GLOBAL, STEP_WINDOW,

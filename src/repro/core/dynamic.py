@@ -123,6 +123,13 @@ def _plan_always_keep(plan: ExecutionPlan, local_window: int) -> np.ndarray:
         local_window, plan.sched.causal)
 
 
+def plan_always_keep(plan: ExecutionPlan, local_window: int) -> np.ndarray:
+    """Public analyzer hook: the (nq, max_steps) never-drop mask for a
+    static plan — what :mod:`repro.analysis.plan_verify` proves global /
+    sink / causal-local tiles can never be dropped against."""
+    return _plan_always_keep(plan, int(local_window))
+
+
 def check_keep(keep: int, always: np.ndarray, what: str = "plan") -> None:
     """The never-drop guarantee needs room: ``keep`` must cover the largest
     per-row always-kept count, else top-k would be forced to drop a

@@ -48,7 +48,7 @@ pin on materialized tables instead.
 """
 from __future__ import annotations
 
-from typing import Optional
+from typing import Iterator, Optional, Tuple
 
 import numpy as np
 
@@ -79,6 +79,17 @@ def _concrete(a) -> Optional[np.ndarray]:
         return np.asarray(a)
     except Exception:
         return None
+
+
+def iter_real_steps(kv_blocks, flags) -> Iterator[Tuple[int, int, int, int]]:
+    """Yield ``(row, step, tile, flag)`` for every real (``flags != 0``)
+    step of a contract table pair — the one walk order every analysis pass
+    shares (:mod:`repro.analysis.plan_verify` builds its coverage counts
+    and visit multisets from exactly this iteration)."""
+    kv = np.asarray(kv_blocks)
+    fl = np.asarray(flags)
+    for i, s in zip(*np.nonzero(fl)):
+        yield int(i), int(s), int(kv[i, s]), int(fl[i, s])
 
 
 def validate_tables(kv_blocks, flags, *, nkb: int,

@@ -28,6 +28,14 @@ launch / one scan) instead of one launch per band plus global special cases.
 This mirrors SALO's scheduler packing band segments so global PEs compute
 "simultaneously with the same input vectors" as the window PEs.
 
+ARCHITECTURE: every table this module emits — forward plans, transposed /
+packed-transposed adjoint walks, sharded per-device slices, chunk prefill
+slices — is statically *provable*, and :mod:`repro.analysis.plan_verify`
+(run by ``python -m repro.analysis.lint``, the CI soundness gate) proves
+exact mask coverage, adjoint permutation equality, shard-exchange
+reconstruction and the dynamic never-drop invariant for every registered
+pattern, reporting (q_block, kv_block) counterexamples on violation.
+
 **TransposedPlan** (the backward IR): the same deduplicated visits regrouped
 into per-KV-block step tables (``plan.transposed()``), walked by the dK/dV
 backward kernel; the dQ backward kernel replays the forward tables. Gradients
@@ -76,8 +84,9 @@ import numpy as np
 
 from repro.core.patterns import HybridSparsePattern
 # Contract constants re-exported from their home (see module docstring).
-from repro.core.plan_contract import (BIG, PAD_SENTINEL, STEP_GLOBAL,
-                                      STEP_WINDOW, validate_tables)
+from repro.core.plan_contract import (BIG, STEP_GLOBAL, STEP_WINDOW,
+                                      validate_tables)
+from repro.core.plan_contract import PAD_SENTINEL as PAD_SENTINEL
 
 
 def _round_up(x: int, m: int) -> int:

@@ -12,7 +12,7 @@ positions) mirror ``launch.specs.input_specs`` exactly.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterator, Optional
+from typing import Dict, Iterator
 
 import numpy as np
 

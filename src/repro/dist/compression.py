@@ -8,7 +8,7 @@ residual into the next step so the *accumulated* update stays unbiased
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

@@ -86,6 +86,10 @@ class ShardedPlan:
     view_tiles: int               # nkb_l + sum(halo_counts) + n_gt
     tables: np.ndarray            # (n_shards, nq_l, W) view-tile ids
     flags: np.ndarray             # (n_shards, nq_l, W) step flags
+    view_map: np.ndarray          # (n_shards, view_tiles) global tile each
+    #                               view slot holds after the exchange (-1 =
+    #                               padded halo slot, never referenced) — the
+    #                               repro.analysis exchange-soundness hook
     send_idx: Tuple[np.ndarray, ...]  # per distance: (n_shards, T_δ) local
     #                                   tile indices each shard SENDS (pad 0)
     g_owner_idx: np.ndarray       # (n_shards, n_gt) local idx of owned gtile
@@ -202,6 +206,23 @@ def shard_plan(plan: ExecutionPlan, n_shards: int) -> ShardedPlan:
                 tables[s, i_l, st] = view_of[s][int(plan.kv_blocks[i, st])]
                 flags[s, i_l, st] = int(plan.flags[i, st])
 
+    # What each view slot physically holds after _build_views runs: the
+    # local region is the shard's own tiles, each halo group slot the tile
+    # its need-list ordered there, each global slot its gtile. Padded halo
+    # slots (beyond a shard's need, up to the SPMD-common T_δ) carry -1:
+    # they receive whatever the sender's slot-0 default gathers, are
+    # referenced by no table, and keep PAD_SENTINEL positions. This map is
+    # what repro.analysis.plan_verify proves the tables + send schedule
+    # against.
+    view_map = np.full((n_shards, view_tiles), -1, dtype=np.int32)
+    for s in range(n_shards):
+        view_map[s, :nkb_l] = np.arange(s * nkb_l, (s + 1) * nkb_l)
+        for d in dists:
+            for slot, t in enumerate(need[d][s]):
+                view_map[s, group_off[d] + slot] = t
+        for gi, t in enumerate(gtiles):
+            view_map[s, g_base + gi] = t
+
     # What each shard SENDS per distance: the tiles its receiver (shard
     # s - δ, which fetches from owner s) listed, as local tile indices.
     send_idx = []
@@ -268,7 +289,8 @@ def shard_plan(plan: ExecutionPlan, n_shards: int) -> ShardedPlan:
         gtiles=tuple(gtiles), halo_dists=tuple(dists),
         halo_counts=tuple(counts),
         halo_real=tuple(len(h) for h in halo), view_tiles=view_tiles,
-        tables=tables, flags=flags, send_idx=tuple(send_idx),
+        tables=tables, flags=flags, view_map=view_map,
+        send_idx=tuple(send_idx),
         g_owner_idx=g_owner_idx, g_owned=g_owned, pos_q=pos_q, pos_k=pos_k,
         t_row_tile=t_row_tile, t_q_blocks=t_q_blocks, t_flags=t_flags)
 

@@ -40,6 +40,13 @@ from repro.kernels.salo_backward import (salo_plan_backward_dq,
                                          salo_plan_backward_dkv)
 from repro.obs.metrics import global_registry
 
+# The launch contract :mod:`repro.analysis.jaxpr_lint` proves by tracing
+# this wrapper: ONE fused ``pallas_call`` forward (the paper's
+# single-launch claim), exactly THREE for the full gradient (fwd replay
+# for residuals + dQ + dK/dV — a fourth launch means the custom_vjp
+# regressed into recomputing the forward).
+LAUNCH_CONTRACT = {"forward": 1, "grad": 3}
+
 
 def _trace_accounting(kernel: str, plan, q, tiles: int) -> None:
     """Launch / deduped-tile / estimated-HBM-byte accounting, unified into

@@ -45,8 +45,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.compat import tpu_compiler_params
-from repro.core.scheduler import (BandSchedule, ExecutionPlan, STEP_GLOBAL,
-                                  STEP_WINDOW)
+from repro.core.scheduler import BandSchedule, ExecutionPlan
 
 NEG_INF = -1e30
 LANES = 128  # TPU vector lane count; m/l scratch is lane-replicated

@@ -10,8 +10,6 @@ device state (smoke tests run on 1 CPU device; only dryrun.py forces 512).
 """
 from __future__ import annotations
 
-import jax
-
 from repro.compat import make_mesh, _axis_type_auto
 
 

@@ -22,7 +22,6 @@ from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs.base import ModelConfig, ShapeCell
 from repro.dist import sharding as shlib

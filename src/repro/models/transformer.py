@@ -17,14 +17,12 @@ Decode caches are pytrees stacked the same way, scanned alongside params.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, List, Tuple
+from typing import List, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.core import HybridSparsePattern
 from repro.dist.sharding import constrain
 from repro.models import layers as L
 from repro.models import moe as MOE

@@ -29,7 +29,7 @@ import collections
 import json
 import time
 from contextlib import contextmanager
-from typing import Callable, Dict, Iterator, List, Optional, Tuple
+from typing import Callable, Dict, Iterator, List
 
 # One logical process for the whole trace; tracks ("tid") name subsystems.
 PID = 1

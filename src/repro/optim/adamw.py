@@ -8,7 +8,7 @@ parameters.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, NamedTuple, Optional
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -36,7 +36,10 @@ class AdamWState(NamedTuple):
 
 def init(cfg: AdamWConfig, params) -> AdamWState:
     mdt = jnp.dtype(cfg.moment_dtype)
-    zeros = lambda p: jnp.zeros(p.shape, mdt)
+
+    def zeros(p):
+        return jnp.zeros(p.shape, mdt)
+
     master = (jax.tree.map(lambda p: p.astype(jnp.float32), params)
               if cfg.use_master else None)
     return AdamWState(step=jnp.zeros((), jnp.int32),

@@ -24,7 +24,7 @@ from __future__ import annotations
 
 import dataclasses
 import re
-from typing import Dict, List, Tuple
+from typing import Dict, List
 
 from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
 

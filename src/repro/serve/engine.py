@@ -21,7 +21,6 @@ import dataclasses
 import json
 import time
 from collections.abc import MutableMapping
-from functools import partial
 from typing import Callable, Dict, Optional
 
 import jax
@@ -464,13 +463,8 @@ class ContinuousEngine:
             slabs = jax.tree.map(lambda a: a[0], slabs)
             page_tables, slot_pos = page_tables[0], slot_pos[0]
             idx = jax.lax.axis_index(ax)
-            slot = lay.slot(t_vec)
-            keep = active & (lay.slot_owner(slot) == idx)
-            local_slot = lay.slot_local(slot)
-            phys = jnp.take_along_axis(
-                page_tables, (local_slot // page)[:, None], axis=1)[:, 0]
-            phys = jnp.where(keep, phys, 0)
-            off = jnp.where(keep, local_slot % page, 0)
+            keep, local_slot, phys, off = sharded_write_target(
+                lay, page_tables, t_vec, active, idx)
             rows = jnp.arange(R)
             slot_pos = slot_pos.at[rows, local_slot].set(
                 jnp.where(keep, t_vec, slot_pos[rows, local_slot]))
@@ -821,3 +815,26 @@ class ContinuousEngine:
         if "metrics" in ctl:   # full-registry image; absent in pre-obs
             self.registry.load_state(ctl["metrics"])   # snapshots, whose
         self.batcher.load_state(ctl["batcher"])        # counters loaded above
+
+
+# ---------------------------------------------------------------------- #
+# Decode write routing under sequence parallelism — module-level so the
+# static analyzer can probe it over every (position, shard) pair without
+# building an engine (repro.analysis.jaxpr_lint.check_write_ownership).
+# ---------------------------------------------------------------------- #
+def sharded_write_target(lay, page_tables, t_vec, active, idx):
+    """Per-shard decode write target: each new token's KV lands on the
+    writing shard ONLY if that shard owns the token's logical slot; every
+    other shard (and every inactive row) routes the write to the reserved
+    null page 0. ``page_tables``: (R, pages_per_shard) this shard's stripe;
+    ``t_vec``: (R,) positions; ``idx``: this shard's "seq" axis index.
+    Returns ``(keep, local_slot, phys, off)``.
+    """
+    slot = lay.slot(t_vec)
+    keep = active & (lay.slot_owner(slot) == idx)
+    local_slot = lay.slot_local(slot)
+    phys = jnp.take_along_axis(
+        page_tables, (local_slot // lay.page)[:, None], axis=1)[:, 0]
+    phys = jnp.where(keep, phys, 0)
+    off = jnp.where(keep, local_slot % lay.page, 0)
+    return keep, local_slot, phys, off

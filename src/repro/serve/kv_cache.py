@@ -30,13 +30,12 @@ engine stays the exact-arithmetic baseline the quant path is tested against.
 """
 from __future__ import annotations
 
-import dataclasses
+import warnings
 from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.patterns import HybridSparsePattern
 from repro.core.scheduler import PAD_SENTINEL
 
 
@@ -48,6 +47,12 @@ class RingCache(NamedTuple):
 
 def ring_init(batch: int, window: int, n_global: int, n_kv_heads: int,
               head_dim: int, dtype) -> RingCache:
+    warnings.warn(
+        "ring_init builds the legacy LOCKSTEP ring cache (whole-batch "
+        "shared positions, dilation-unaware ring sizing); new serving "
+        "paths should use the pooled paged slab "
+        "(repro.serve.paged_cache.layout_for_pattern + slab_init)",
+        DeprecationWarning, stacklevel=2)
     size = n_global + window
     return RingCache(
         k=jnp.zeros((batch, size, n_kv_heads, head_dim), dtype),

@@ -46,7 +46,6 @@ of truth; the reset just stops stale amaxes from inflating the grid).
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import List, NamedTuple
 
 import jax

@@ -10,7 +10,6 @@ import numpy as np
 import pytest
 
 from repro.configs import get_smoke
-from repro.configs.base import SALOConfig
 from repro.core import patterns as P
 from repro.core.scheduler import (BIG, build_chunk_plan,
                                   ring_view_positions)

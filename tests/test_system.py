@@ -2,10 +2,7 @@
 serve, through the public launchers (the paths a user actually runs)."""
 import os
 
-import jax
-import jax.numpy as jnp
 import numpy as np
-import pytest
 
 
 def test_train_resume_serve_roundtrip(tmp_path):

@@ -15,8 +15,7 @@ import pytest
 
 from repro.core import patterns as P
 from repro.core.blockwise import table_attention_scan
-from repro.core.plan_contract import (STEP_GLOBAL, STEP_WINDOW,
-                                      validate_tables)
+from repro.core.plan_contract import validate_tables
 from repro.core.scheduler import schedule
 from repro.kernels.salo_attention import salo_table_attention
 
